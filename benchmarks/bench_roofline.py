@@ -1,0 +1,118 @@
+"""Roofline + arch-trace benchmarks (the TPU side of the study).
+
+* roofline rows read the dry-run results JSON (written by
+  ``repro.launch.dryrun``) and emit the three terms per cell;
+* arch-COPA rows run the paper's cache/perf analysis over the assigned
+  architectures (workloads.lm), tying the technique to our model zoo;
+* kernel rows time the Pallas kernels in interpret mode (correctness-scale
+  shapes; wall time on CPU is NOT TPU perf — the derived column carries the
+  modelled HBM traffic instead, which is the quantity the kernels optimize).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from benchmarks.common import Csv, timed
+from repro.core import hw, perfmodel
+from repro.core.hw import GB, MB
+from repro.core.roofline import RooflineReport, useful_flops_cell
+import repro.configs as configs
+
+DRYRUN_JSON = os.environ.get("DRYRUN_JSON", "dryrun_results.json")
+
+
+def load_reports(path: str = DRYRUN_JSON) -> list[RooflineReport]:
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        results = json.load(f)
+    reports = []
+    for key, r in results.items():
+        if r.get("status") != "ok":
+            continue
+        cfg = configs.get(r["arch"])
+        shape = configs.SHAPES[r["shape"]]
+        reports.append(RooflineReport(
+            arch=r["arch"], shape=r["shape"], mesh=r["mesh"],
+            chips=r["chips"],
+            hlo_flops=r.get("flops_adjusted", r["flops_per_device"]),
+            hlo_bytes=r.get("bytes_adjusted", r["bytes_per_device"]),
+            collective_bytes=r.get("collective_adjusted",
+                                   r["collective_bytes_per_device"]),
+            model_flops=useful_flops_cell(cfg, shape),
+            peak_memory_bytes=r.get("peak_memory_per_device", 0),
+        ))
+    return reports
+
+
+def bench_roofline(csv: Csv):
+    reports = load_reports()
+    if not reports:
+        csv.add("roofline.missing", 0.0, "run repro.launch.dryrun first")
+        return
+    for r in sorted(reports, key=lambda x: (x.arch, x.shape, x.mesh)):
+        if r.mesh != "16x16":
+            continue
+        csv.add(f"roofline.{r.arch}.{r.shape}", 0.0,
+                f"compute={r.compute_s:.3e}s memory={r.memory_s:.3e}s "
+                f"collective={r.collective_s:.3e}s dominant={r.dominant} "
+                f"roofline_frac={r.roofline_fraction:.3f}")
+
+
+def bench_arch_copa(csv: Csv):
+    """The paper's analysis applied to the assigned architectures."""
+    from repro.core import msm
+    from repro.workloads.lm import arch_trace
+
+    def run():
+        rows = []
+        for arch in configs.ARCHS:
+            for shape in ("train_4k", "decode_32k"):
+                t = arch_trace(arch, shape)
+                pm = perfmodel.PerfModel(t)
+                r = pm.run(hw.GPU_N)
+                an = msm.analyze(t)
+                red = an.baseline_traffic / max(an.sweep[960 * MB + 0], 1e-9)
+                rows.append((f"{arch}.{shape}", r.time_s, r.bottleneck,
+                             min(red, 1e3)))
+        return rows
+
+    rows, us = timed(run)
+    for name, t, bn, red in rows:
+        csv.add(f"arch_copa.{name}", us / len(rows),
+                f"T={t*1e3:.2f}ms bottleneck={bn} l3_960MB_traffic_reduction={red:.1f}x")
+
+
+def bench_kernels(csv: Csv):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ref
+    from repro.kernels.flash_attention import flash_attention_pallas
+
+    def run():
+        key = jax.random.PRNGKey(0)
+        b, s, h, kvh, d = 1, 1024, 8, 2, 64
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (b, s, h, d), jnp.float32)
+        k = jax.random.normal(ks[1], (b, s, kvh, d), jnp.float32)
+        v = jax.random.normal(ks[2], (b, s, kvh, d), jnp.float32)
+        o1 = flash_attention_pallas(q, k, v, causal=True, interpret=True)
+        o2 = ref.flash_attention_ref(q, k, v, causal=True)
+        err = float(jnp.abs(o1 - o2).max())
+        # modelled traffic: naive materializes S twice (fp32), flash doesn't
+        naive_bytes = (q.size + k.size + v.size + o1.size) * 4 \
+            + 2 * b * h * s * s * 4
+        flash_bytes = (q.size + k.size + v.size + o1.size) * 4
+        return err, naive_bytes / flash_bytes
+
+    (err, ratio), us = timed(run)
+    csv.add("kernels.flash_attention.allclose_err", us, f"{err:.2e}")
+    csv.add("kernels.flash_attention.hbm_traffic_filter", 0.0,
+            f"{ratio:.1f}x fewer HBM bytes vs naive (S=1024)")
+
+
+ALL = [bench_roofline, bench_arch_copa, bench_kernels]

@@ -1,0 +1,49 @@
+"""Shared benchmark helpers: suite iteration, CSV emission, model caching."""
+from __future__ import annotations
+
+import time
+from functools import lru_cache
+
+import numpy as np
+
+from repro.core import hw, perfmodel
+from repro.workloads import mlperf
+
+
+@lru_cache(maxsize=256)
+def model_for(suite: str, name: str, setting: str) -> perfmodel.PerfModel:
+    if suite == "train":
+        return perfmodel.PerfModel(mlperf.training_trace(name, setting))
+    if suite == "infer":
+        return perfmodel.PerfModel(mlperf.inference_trace(name, setting))
+    raise KeyError(suite)
+
+
+def train_models(setting: str):
+    return [(n, model_for("train", n, setting)) for n in mlperf.TRAIN_BATCHES]
+
+
+def infer_models(setting: str):
+    return [(n, model_for("infer", n, setting)) for n in mlperf.INFER_BATCHES]
+
+
+def geomean(xs):
+    return perfmodel.geomean(xs)
+
+
+class Csv:
+    def __init__(self):
+        self.rows: list[tuple[str, float, str]] = []
+
+    def add(self, name: str, us_per_call: float, derived):
+        self.rows.append((name, us_per_call, derived))
+
+    def emit(self):
+        for name, us, derived in self.rows:
+            print(f"{name},{us:.1f},{derived}")
+
+
+def timed(fn):
+    t0 = time.time()
+    out = fn()
+    return out, (time.time() - t0) * 1e6

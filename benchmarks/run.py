@@ -1,0 +1,36 @@
+"""Benchmark harness: one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig11]
+
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from benchmarks.common import Csv
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import bench_paper_figs, bench_roofline
+
+    benches = bench_paper_figs.ALL + bench_roofline.ALL
+    csv = Csv()
+    print("name,us_per_call,derived")
+    for fn in benches:
+        if args.only and args.only not in fn.__name__:
+            continue
+        try:
+            fn(csv)
+        except Exception as e:  # noqa: BLE001 — report, keep benching
+            csv.add(f"{fn.__name__}.ERROR", 0.0, f"{type(e).__name__}: {e}")
+    csv.emit()
+
+
+if __name__ == '__main__':
+    main()

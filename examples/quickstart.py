@@ -1,0 +1,40 @@
+"""Quickstart: train a ~100M-param model for a few hundred steps on CPU.
+
+    PYTHONPATH=src python examples/quickstart.py [--steps 300]
+
+Uses the full public API: config registry -> LanguageModel -> sharded train
+step -> deterministic data pipeline -> watchdog -> async checkpoints.
+The model is whisper-base's decoder-family cousin at ~100M params — big
+enough to be real, small enough for a CPU box.
+"""
+import argparse
+import dataclasses
+import sys
+
+sys.path.insert(0, "src")
+
+import repro.configs as configs
+from repro.launch.train import main as train_main
+
+
+def build_100m():
+    """A ~100M dense config registered on the fly."""
+    base = configs.get("tinyllama-1.1b")
+    cfg = dataclasses.replace(
+        base, name="quickstart-100m", n_layers=6, d_model=512, n_heads=8,
+        n_kv_heads=4, head_dim=64, d_ff=1536, vocab_size=8192)
+    configs.ARCHS[cfg.name] = cfg
+    print(f"quickstart model: {cfg.n_params()/1e6:.1f}M params")
+    return cfg
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt-dir", default="/tmp/quickstart_ckpt")
+    args = ap.parse_args()
+    build_100m()
+    train_main(["--arch", "quickstart-100m", "--steps", str(args.steps),
+                "--global-batch", "8", "--seq-len", "256",
+                "--ckpt-dir", args.ckpt_dir, "--save-every", "100",
+                "--log-every", "10"])

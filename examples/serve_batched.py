@@ -1,0 +1,20 @@
+"""Batched serving: prefill a batch of prompts, decode with the KV cache.
+
+    PYTHONPATH=src python examples/serve_batched.py --arch yi-6b-smoke
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-6b-smoke")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--gen", type=int, default=24)
+    args = ap.parse_args()
+    serve_main(["--arch", args.arch, "--batch", str(args.batch),
+                "--prompt-len", "16", "--gen", str(args.gen),
+                "--max-len", "64"])

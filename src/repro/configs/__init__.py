@@ -1,0 +1,32 @@
+"""Architecture registry: ``get(arch_id)`` resolves ``--arch`` flags."""
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig, cell_is_runnable
+
+from repro.configs.tinyllama_1_1b import CONFIG as TINYLLAMA
+from repro.configs.yi_6b import CONFIG as YI_6B
+from repro.configs.mistral_nemo_12b import CONFIG as MISTRAL_NEMO
+from repro.configs.granite_3_2b import CONFIG as GRANITE
+from repro.configs.qwen3_moe_235b_a22b import CONFIG as QWEN3_MOE
+from repro.configs.deepseek_v2_236b import CONFIG as DEEPSEEK_V2
+from repro.configs.mamba2_1_3b import CONFIG as MAMBA2
+from repro.configs.zamba2_1_2b import CONFIG as ZAMBA2
+from repro.configs.internvl2_26b import CONFIG as INTERNVL2
+from repro.configs.whisper_base import CONFIG as WHISPER
+
+ARCHS: dict[str, ModelConfig] = {
+    c.name: c
+    for c in (
+        TINYLLAMA, YI_6B, MISTRAL_NEMO, GRANITE, QWEN3_MOE,
+        DEEPSEEK_V2, MAMBA2, ZAMBA2, INTERNVL2, WHISPER,
+    )
+}
+
+
+def get(arch_id: str) -> ModelConfig:
+    if arch_id.endswith("-smoke"):
+        return ARCHS[arch_id[: -len("-smoke")]].smoke()
+    return ARCHS[arch_id]
+
+
+__all__ = [
+    "ARCHS", "SHAPES", "ModelConfig", "ShapeConfig", "cell_is_runnable", "get",
+]

@@ -1,0 +1,16 @@
+"""Granite-3.0-2B base: GQA dense [hf:ibm-granite/granite-3.0-2b-base; hf]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-3-2b",
+    family="dense",
+    n_layers=40,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=8192,
+    vocab_size=49155,
+    head_dim=64,
+    tie_embeddings=True,
+    rope_theta=10_000.0,
+)

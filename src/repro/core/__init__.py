@@ -1,0 +1,26 @@
+"""COPA-GPU core: the paper's analytical machinery + TPU adaptation.
+
+Public API:
+    hw         — hardware descriptions (GPU-N, COPA links, TPU v5e)
+    copa       — Table V design space + energy model
+    trace      — tensor-access trace IR
+    stackdist  — LRU stack distances (Mattson)
+    cachesim   — L2 -> L3 -> DRAM hierarchy traffic model
+    perfmodel  — bottleneck time model + Fig-2 attribution
+    roofline   — 3-term TPU roofline from dry-run artifacts
+    hloparse   — collective-bytes extraction from HLO
+    msm        — software memory-system-module policies (TPU adaptation)
+"""
+from repro.core import cachesim, copa, hloparse, hw, msm, perfmodel, roofline, stackdist, trace
+
+__all__ = [
+    "cachesim",
+    "copa",
+    "hloparse",
+    "hw",
+    "msm",
+    "perfmodel",
+    "roofline",
+    "stackdist",
+    "trace",
+]

@@ -1,0 +1,262 @@
+"""Memory-hierarchy traffic model: L2 -> (optional memory-side L3) -> DRAM.
+
+Faithful to the paper's §III-C microarchitecture:
+
+* the L2 (inside the GPM) is the point of coherence and the first bandwidth
+  filter; every post-L2 miss/writeback crosses the UHB link when an MSM with
+  L3 is present;
+* the L3 is a *memory-side* cache: it only observes post-L2 traffic, is
+  neither inclusive nor exclusive, and needs no coherence. We model the
+  (L2, L3) pair for DRAM-traffic purposes as a single LRU pool of capacity
+  ``C_L2 + C_L3`` observed by DRAM — exact for the steady-state streaming
+  traffic that dominates DL iterations (validated against BlockLRU in tests).
+
+Residency is fractional at tensor granularity: a touch of tensor T with
+bytes-weighted unique-reuse distance U against a cache of capacity C finds
+``clip(C - U, 0, |T|)`` of its bytes resident. Writebacks use a per-tensor
+dirty fraction; dirty bytes evicted before the next touch are charged to the
+next level (attributed, for per-op accounting, to the touching op — the
+evicting op is not identifiable at this granularity).
+
+Steady state: the paper simulates one end-to-end iteration of workloads that
+run for thousands of iterations, so cold misses are amortized; we double the
+trace and read statistics off the second copy (``cyclic=True``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import lru_cache
+
+import numpy as np
+
+from repro.core.hw import GpuSpec
+from repro.core.stackdist import _mattson_pass
+from repro.core.trace import Trace
+
+
+@dataclass
+class TouchStream:
+    """Flattened, doubled touch arrays for one trace (capacity-independent)."""
+
+    n_ops: int
+    op_idx: np.ndarray     # int32, len 2T (doubled)
+    sizes: np.ndarray      # float64
+    is_write: np.ndarray   # bool
+    dist: np.ndarray       # bytes-weighted unique reuse distance per touch
+    tensor_idx: np.ndarray  # int64 dense tensor ids
+    n_tensors: int
+    second_half: int       # index where the steady-state copy begins
+
+
+def _assign_buffers(trace: Trace) -> dict[str, str]:
+    """Caching-allocator model: transient tensors (first touched by a write,
+    later dead) recycle buffers freed by earlier-dying tensors, exactly like
+    the framework allocators under the paper's traces. Returns a tensor->
+    buffer mapping; persistent tensors (weights, optimizer state — read
+    before written) and streaming inputs keep their own identity.
+
+    Without this, every dirty activation would be charged a DRAM writeback
+    once per iteration when its (never-reused) address range is evicted;
+    with buffer recycling the next owner overwrites the dirty lines while
+    they are still resident — which is what lets a large L3 collapse
+    inference traffic (paper Fig 4's 16x)."""
+    touches = list(trace.touches())
+    first: dict[str, int] = {}
+    last: dict[str, int] = {}
+    size: dict[str, int] = {}
+    first_is_write: dict[str, bool] = {}
+    for pos, (_, t, b, w) in enumerate(touches):
+        if t not in first:
+            first[t] = pos
+            first_is_write[t] = w
+        last[t] = pos
+        size[t] = max(size.get(t, 0), b)
+
+    def transient(t: str) -> bool:
+        return first_is_write[t] and not t.startswith("in.")
+
+    # Free events sorted by position; greedy best-fit (smallest buffer >= size).
+    # Buffers are recycled REUSE_DELAY touches after death: asynchronous
+    # execution keeps freed buffers pinned briefly, so reuse is near- but not
+    # perfectly-immediate (calibrated against Fig 4's inference saturation
+    # capacities).
+    REUSE_DELAY = 24
+    mapping: dict[str, str] = {}
+    free: list[tuple[int, str]] = []  # (buffer_size, buffer_name)
+    deaths = sorted((last[t] + REUSE_DELAY, t) for t in first if transient(t))
+    di = 0
+    buf_of: dict[str, str] = {}
+    import bisect
+
+    for pos, (_, t, b, w) in enumerate(touches):
+        while di < len(deaths) and deaths[di][0] < pos:
+            dead = deaths[di][1]
+            if dead in buf_of:
+                bisect.insort(free, (size[dead], buf_of[dead]))
+            di += 1
+        if t in mapping or not transient(t) or first[t] != pos:
+            continue
+        i = bisect.bisect_left(free, (size[t], ""))
+        if i < len(free):
+            _, buf = free.pop(i)
+        else:
+            buf = f"__buf{len(buf_of)}.{t}"
+        mapping[t] = buf
+        buf_of[t] = buf
+    return mapping
+
+
+def build_stream(trace: Trace, cyclic: bool = True, reuse_buffers: bool = True) -> TouchStream:
+    """Tensors whose name starts with ``in.`` are *streaming*: fresh data
+    arrives every iteration (input batches, labels), so consecutive
+    iterations never reuse them — they get one tensor identity per iteration
+    copy instead of wrapping around. Transient tensors share recycled buffer
+    identities (see :func:`_assign_buffers`)."""
+    mapping = _assign_buffers(trace) if reuse_buffers else {}
+    op_idx, tids, sizes, is_write = [], [], [], []
+    intern: dict[str, int] = {}
+    stream_seq = 0
+    for i, t, b, w in trace.touches():
+        op_idx.append(i)
+        t = mapping.get(t, t)
+        if t.startswith("in.") and t not in intern:
+            # unique id now; forget it so the doubled copy gets a fresh one
+            tids.append(len(intern) + 1_000_000_000 + stream_seq)
+            stream_seq += 1
+        else:
+            tids.append(intern.setdefault(t, len(intern)))
+        sizes.append(float(b))
+        is_write.append(w)
+    op_idx = np.asarray(op_idx, dtype=np.int32)
+    tids = np.asarray(tids, dtype=np.int64)
+    sizes = np.asarray(sizes, dtype=np.float64)
+    is_write = np.asarray(is_write, dtype=bool)
+    n = len(op_idx)
+    if cyclic and n:
+        op_idx = np.concatenate([op_idx, op_idx])
+        # Streaming tensors (ids >= 1e9) must NOT alias across the two copies.
+        tids2 = np.where(tids >= 1_000_000_000, tids + 1_000_000_000, tids)
+        tids = np.concatenate([tids, tids2])
+        sizes = np.concatenate([sizes, sizes])
+        is_write = np.concatenate([is_write, is_write])
+    # Dense tensor ids (streaming copies included) for state arrays.
+    if n:
+        _, dense = np.unique(tids, return_inverse=True)
+    else:
+        dense = tids
+    dist = _mattson_pass(dense, sizes) if n else np.zeros(0)
+    return TouchStream(
+        n_ops=len(trace.ops),
+        op_idx=op_idx,
+        sizes=sizes,
+        is_write=is_write,
+        dist=dist,
+        tensor_idx=dense,
+        n_tensors=int(dense.max()) + 1 if n else 0,
+        second_half=n if cyclic else 0,
+    )
+
+
+@dataclass
+class LevelTraffic:
+    """Per-op traffic crossing out the bottom of one cache level."""
+
+    fill: np.ndarray        # bytes fetched per op (read misses)
+    writeback: np.ndarray   # dirty bytes written back per op
+
+    @property
+    def total(self) -> float:
+        return float(self.fill.sum() + self.writeback.sum())
+
+    @property
+    def total_fill(self) -> float:
+        return float(self.fill.sum())
+
+    @property
+    def total_writeback(self) -> float:
+        return float(self.writeback.sum())
+
+
+def traffic_below(stream: TouchStream, capacities: list[float]) -> list[LevelTraffic]:
+    """Traffic leaving an LRU pool of each capacity, one trace pass total.
+
+    Reads are vectorized over capacities; the dirty-fraction recurrence is a
+    single sequential pass carrying a (n_tensors x n_caps) state.
+    """
+    caps = np.asarray(capacities, dtype=np.float64)
+    ncap = len(caps)
+    fills = np.zeros((ncap, stream.n_ops))
+    wbs = np.zeros((ncap, stream.n_ops))
+    if len(stream.op_idx) == 0:
+        return [LevelTraffic(fills[i], wbs[i]) for i in range(ncap)]
+
+    dirty = np.zeros((stream.n_tensors, ncap))
+    start_attrib = stream.second_half
+    for t in range(len(stream.op_idx)):
+        size = stream.sizes[t]
+        d = stream.dist[t]
+        x = stream.tensor_idx[t]
+        op = stream.op_idx[t]
+        record = t >= start_attrib
+        if np.isinf(d):
+            resident = np.zeros(ncap)
+        else:
+            resident = np.clip(caps - d, 0.0, size)
+        evicted = size - resident
+        wb_bytes = evicted * dirty[x]
+        if record:
+            wbs[:, op] += wb_bytes
+        if stream.is_write[t]:
+            if record:
+                # full-tensor stores: no fill on write-allocate
+                pass
+            dirty[x] = 1.0
+        else:
+            if record:
+                fills[:, op] += evicted
+            # evicted dirty bytes were flushed; resident dirty bytes remain
+            frac = np.divide(resident, size, out=np.zeros_like(resident), where=size > 0)
+            dirty[x] = dirty[x] * frac
+    return [LevelTraffic(fills[i], wbs[i]) for i in range(ncap)]
+
+
+@dataclass
+class HierarchyTraffic:
+    """Traffic at each boundary of the §III-C memory system, per op."""
+
+    l2_touch: np.ndarray          # bytes served by the L2 (all touches)
+    post_l2: LevelTraffic         # traffic crossing the UHB link (or to DRAM)
+    dram: LevelTraffic            # traffic reaching DRAM
+    has_l3: bool
+
+    @property
+    def l3_bytes(self) -> float:
+        """Bytes served by the L3 = post-L2 traffic that did not reach DRAM."""
+        return max(self.post_l2.total - self.dram.total, 0.0)
+
+
+def simulate_hierarchy(
+    trace: Trace, spec: GpuSpec, cyclic: bool = True, stream: TouchStream | None = None
+) -> HierarchyTraffic:
+    stream = stream if stream is not None else build_stream(trace, cyclic=cyclic)
+    l2_touch = np.zeros(stream.n_ops)
+    half = stream.second_half
+    np.add.at(l2_touch, stream.op_idx[half:], stream.sizes[half:])
+
+    if spec.l3_capacity:
+        post_l2, dram = traffic_below(
+            stream, [spec.l2_capacity, spec.l2_capacity + spec.l3_capacity]
+        )
+        return HierarchyTraffic(l2_touch, post_l2, dram, has_l3=True)
+    (post_l2,) = traffic_below(stream, [spec.l2_capacity])
+    return HierarchyTraffic(l2_touch, post_l2, post_l2, has_l3=False)
+
+
+def dram_traffic_sweep(
+    trace: Trace, llc_capacities: list[float], cyclic: bool = True
+) -> dict[float, float]:
+    """Total DRAM traffic vs LLC capacity (paper Fig 4). The LLC here is the
+    union pool DRAM sees (L2, or L2+L3 when composed)."""
+    stream = build_stream(trace, cyclic=cyclic)
+    results = traffic_below(stream, list(llc_capacities))
+    return {c: r.total for c, r in zip(llc_capacities, results)}

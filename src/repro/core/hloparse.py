@@ -1,0 +1,141 @@
+"""Extract collective-traffic and shape information from HLO text.
+
+``compiled.cost_analysis()`` reports FLOPs and HBM bytes but not collective
+bytes, so we parse the (stable-)HLO/XLA text for collective ops and sum their
+operand sizes. Works on both ``lowered.as_text()`` (StableHLO) and
+``compiled.as_text()`` (optimized HLO); the latter is preferred because SPMD
+partitioning has already materialized the real collective schedule.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_KINDS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# e.g.  %all-gather.3 = bf16[16,1024,4096]{2,1,0} all-gather(%param.1), ...
+_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|pred|c64|c128)\[([0-9,]*)\]")
+
+
+def shape_bytes(dtype: str, dims_str: str) -> int:
+    n = 1
+    if dims_str.strip():
+        for d in dims_str.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+@dataclass
+class CollectiveStats:
+    """Bytes moved per collective kind (operand bytes, per device)."""
+
+    bytes_by_kind: dict[str, float] = field(default_factory=lambda: defaultdict(float))
+    count_by_kind: dict[str, int] = field(default_factory=lambda: defaultdict(int))
+
+    @property
+    def total_bytes(self) -> float:
+        return float(sum(self.bytes_by_kind.values()))
+
+    @property
+    def total_count(self) -> int:
+        return int(sum(self.count_by_kind.values()))
+
+    def as_dict(self) -> dict:
+        return {
+            "total_bytes": self.total_bytes,
+            "by_kind": {k: float(v) for k, v in self.bytes_by_kind.items()},
+            "counts": {k: int(v) for k, v in self.count_by_kind.items()},
+        }
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum operand sizes of every collective op in an HLO module dump.
+
+    Each matching instruction line looks like
+    ``%name = <out-shape-or-tuple> <kind>(...operands...)``; the *output*
+    shape(s) equal the data each device sends/receives for these collectives
+    (all-gather output includes the gathered axis; all-reduce output equals
+    input). We count output bytes, the standard convention for link-traffic
+    accounting, and ignore `-start/-done` duplicate pairs by counting only
+    `-start` when both forms are present on the same value name.
+    """
+    stats = CollectiveStats()
+    seen_started: set[str] = set()
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if not s or "=" not in s:
+            continue
+        m = re.search(
+            r"=\s*(.+?)\s+(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+            r"(-start|-done)?\(",
+            s,
+        )
+        if not m:
+            continue
+        shapes_part, kind, phase = m.group(1), m.group(2), m.group(3) or ""
+        name = s.split("=", 1)[0].strip()
+        if phase == "-done":
+            continue  # counted at -start
+        if phase == "-start":
+            seen_started.add(name)
+        nbytes = 0
+        for dm in _SHAPE_RE.finditer(shapes_part):
+            nbytes += shape_bytes(dm.group(1), dm.group(2))
+        stats.bytes_by_kind[kind] += nbytes
+        stats.count_by_kind[kind] += 1
+    return stats
+
+
+def parse_stablehlo_collectives(text: str) -> CollectiveStats:
+    """Same accounting for StableHLO (``lowered.as_text()``) dialect ops.
+
+    StableHLO spells them ``stablehlo.all_reduce`` etc. with
+    ``tensor<16x1024xbf16>`` result types.
+    """
+    stats = CollectiveStats()
+    kinds = {
+        "all_gather": "all-gather",
+        "all_reduce": "all-reduce",
+        "reduce_scatter": "reduce-scatter",
+        "all_to_all": "all-to-all",
+        "collective_permute": "collective-permute",
+    }
+    tensor_re = re.compile(r"tensor<([0-9x]*)x?(f64|f32|f16|bf16|i64|i32|i16|i8|i1)>")
+    dt_map = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "i64": 8, "i32": 4, "i16": 2, "i8": 1, "i1": 1}
+    for line in text.splitlines():
+        for op, kind in kinds.items():
+            if f"stablehlo.{op}" in line or f'"stablehlo.{op}"' in line:
+                # result type is after '->' (or ':' for single-result ops)
+                tail = line.split("->")[-1]
+                nbytes = 0
+                for tm in tensor_re.finditer(tail):
+                    n = 1
+                    dims = tm.group(1)
+                    if dims:
+                        for d in dims.split("x"):
+                            if d:
+                                n *= int(d)
+                    nbytes += n * dt_map[tm.group(2)]
+                stats.bytes_by_kind[kind] += nbytes
+                stats.count_by_kind[kind] += 1
+                break
+    return stats
+
+
+def count_hlo_ops(hlo_text: str, opname: str) -> int:
+    """Count occurrences of an HLO op (e.g. 'fusion', 'dot', 'while')."""
+    pat = re.compile(rf"=\s*[^=]*\b{re.escape(opname)}\(")
+    return sum(1 for line in hlo_text.splitlines() if pat.search(line))

@@ -1,0 +1,152 @@
+"""Software Memory-System Modules — the COPA idea, TPU-native.
+
+The paper composes one reusable compute module (GPM) with domain-specialized
+memory-system modules (MSM). On a TPU fleet the compute module is the model's
+math graph; the composable memory system is *policy*: which attention
+implementation, which remat policy, which optimizer-state dtype, how the KV
+cache is laid out and sharded, which Pallas kernels filter HBM traffic.
+
+``compose(domain, ...)`` returns the policy bundle for a workload domain the
+same way a COPA SKU pairs a GPM with an MSM; ``recommend()`` derives the
+domain from an (arch, shape) cell, and ``analyze()`` runs the paper's cache
+model over the cell's trace to quantify how much traffic each policy filters
+(the software analogue of Fig 4).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+from repro.core.cachesim import dram_traffic_sweep
+from repro.core.hw import MB, TPU_V5E
+from repro.core.trace import Trace
+
+
+@dataclass(frozen=True)
+class MemoryPolicy:
+    """One composed software-MSM: everything that shapes HBM traffic."""
+
+    name: str
+    attention_impl: str = "chunked"      # naive | chunked | pallas
+    attention_block_q: int = 512
+    attention_block_kv: int = 1024
+    remat: str = "none"                  # none | dots | full
+    optimizer_dtype: str = "float32"     # float32 | bfloat16 moments
+    master_weights: bool = True
+    kv_cache_dtype: str = "bfloat16"
+    kv_shard_axis: str | None = None     # e.g. "data" for context-parallel decode
+    fused_ffn: bool = False              # Pallas fused SwiGLU
+    donate_state: bool = True
+    grad_compression: str | None = None  # None | bf16 | int8_ef
+    microbatches: int = 1                # gradient-accumulation depth
+    serve_fsdp: bool = True              # False: replicate weights over data
+                                         # (kills per-step weight all-gathers)
+
+    def describe(self) -> str:
+        bits = [
+            f"attn={self.attention_impl}(q{self.attention_block_q}/kv{self.attention_block_kv})",
+            f"remat={self.remat}",
+            f"opt={self.optimizer_dtype}" + ("+master" if self.master_weights else ""),
+            f"kv={self.kv_cache_dtype}" + (f"@{self.kv_shard_axis}" if self.kv_shard_axis else ""),
+        ]
+        if self.fused_ffn:
+            bits.append("fused_ffn")
+        if self.grad_compression:
+            bits.append(f"gradcomp={self.grad_compression}")
+        return " ".join(bits)
+
+
+# The domain-specialized SKUs — same model "GPM", different memory systems.
+TRAIN_MSM = MemoryPolicy(
+    name="msm_train",
+    attention_impl="chunked",
+    remat="full",          # per-block full remat: only block boundaries saved
+    optimizer_dtype="float32",
+    grad_compression=None,
+    microbatches=4,
+)
+TRAIN_LARGE_MSM = replace(
+    TRAIN_MSM,
+    name="msm_train_large",
+    remat="full",
+    optimizer_dtype="bfloat16",
+    master_weights=False,   # stochastic-rounding updates: 6 bytes/param total
+    grad_compression="bf16",
+    microbatches=16,
+)
+PREFILL_MSM = MemoryPolicy(
+    name="msm_prefill",
+    attention_impl="chunked",
+    attention_block_q=1024,
+    attention_block_kv=1024,
+    remat="none",
+    master_weights=False,
+)
+DECODE_MSM = MemoryPolicy(
+    name="msm_decode",
+    attention_impl="chunked",
+    attention_block_kv=2048,
+    remat="none",
+    master_weights=False,
+)
+LONG_CONTEXT_MSM = replace(
+    DECODE_MSM,
+    name="msm_long_context",
+    kv_shard_axis="data",     # context-parallel flash-decode
+)
+
+_BY_NAME = {
+    p.name: p
+    for p in (TRAIN_MSM, TRAIN_LARGE_MSM, PREFILL_MSM, DECODE_MSM, LONG_CONTEXT_MSM)
+}
+
+
+def compose(name: str, **overrides) -> MemoryPolicy:
+    base = _BY_NAME[name]
+    return replace(base, **overrides) if overrides else base
+
+
+def recommend(shape_name: str, n_params: float) -> MemoryPolicy:
+    """Pick the software-MSM for a workload cell, like choosing a COPA SKU."""
+    from repro.sharding.optflags import opt
+
+    def finish(p: MemoryPolicy) -> MemoryPolicy:
+        if not shape_name.startswith("train"):
+            if opt("serve_nofsdp"):
+                p = replace(p, serve_fsdp=False)
+            if opt("kv_int8"):
+                p = replace(p, kv_cache_dtype="int8")
+        return p
+
+    if shape_name.startswith("train"):
+        # Models too large for fp32 optimizer residency get the large-model MSM
+        # (bf16 moments + full remat), exactly the capacity-driven
+        # specialization argument of the paper.
+        big = n_params * 14 > 0.70 * TPU_V5E.hbm_capacity * 256
+        return finish(TRAIN_LARGE_MSM if big else TRAIN_MSM)
+    if shape_name.startswith("prefill"):
+        return finish(PREFILL_MSM)
+    if shape_name.startswith("long"):
+        return finish(LONG_CONTEXT_MSM)
+    return finish(DECODE_MSM)
+
+
+@dataclass
+class TrafficAnalysis:
+    """Fig-4-style sweep for a cell: traffic filtered per on-chip capacity."""
+
+    trace_name: str
+    baseline_traffic: float
+    sweep: dict[float, float]
+
+    def reduction_at(self, capacity: float) -> float:
+        return self.baseline_traffic / max(self.sweep[capacity], 1.0)
+
+
+def analyze(trace: Trace, capacities_mb: tuple[int, ...] = (60, 120, 240, 480, 960, 1920, 3840)) -> TrafficAnalysis:
+    caps = [c * MB for c in capacities_mb]
+    sweep = dram_traffic_sweep(trace, caps)
+    return TrafficAnalysis(
+        trace_name=trace.name,
+        baseline_traffic=sweep[caps[0]],
+        sweep=sweep,
+    )

@@ -1,0 +1,177 @@
+"""Tensor-granular access-trace IR.
+
+The paper evaluates one *end-to-end iteration* of each workload through a
+trace-driven memory-hierarchy simulator, explicitly to capture inter-kernel
+reuse (§IV-A). We reproduce that with a deterministic, analytic trace: a
+sequence of :class:`Op` records, each reading/writing named logical tensors.
+
+Granularity: one Op ≈ one GPU kernel (a GEMM, a conv, a fused elementwise
+group). DL traffic streams over large tensors, so tensor-level touches (with
+fractional residency inside the cache model) are the natural unit — the
+cache model in ``cachesim.py`` is calibrated against an exact block-level LRU
+in the tests.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Iterable, Sequence
+
+BYTES = {"fp32": 4, "tf32": 4, "fp16": 2, "bf16": 2, "int8": 1, "fp8": 1}
+
+
+@dataclass(frozen=True)
+class Op:
+    """One kernel launch: FLOPs plus the tensors it touches.
+
+    ``reads``/``writes`` are tuples of ``(tensor_name, nbytes)``. A tensor
+    that is accumulated in place (e.g. a weight-gradient buffer) appears in
+    both. ``parallelism`` is the number of concurrent scalar lanes the kernel
+    can fill; the perf model turns it into an SM-occupancy factor.
+    """
+
+    name: str
+    flops: float
+    reads: tuple[tuple[str, int], ...] = ()
+    writes: tuple[tuple[str, int], ...] = ()
+    precision: str = "fp16"
+    parallelism: float = float("inf")
+
+    @property
+    def read_bytes(self) -> int:
+        return sum(b for _, b in self.reads)
+
+    @property
+    def write_bytes(self) -> int:
+        return sum(b for _, b in self.writes)
+
+    @property
+    def touch_bytes(self) -> int:
+        return self.read_bytes + self.write_bytes
+
+
+@dataclass
+class Trace:
+    """One end-to-end iteration of a workload."""
+
+    name: str
+    ops: list[Op] = field(default_factory=list)
+    # Metadata for reporting; not used by the simulator itself.
+    batch_size: int = 0
+    kind: str = "training"  # "training" | "inference"
+
+    # -- builders -------------------------------------------------------------
+    def emit(
+        self,
+        name: str,
+        flops: float,
+        reads: Sequence[tuple[str, int]] = (),
+        writes: Sequence[tuple[str, int]] = (),
+        precision: str = "fp16",
+        parallelism: float | None = None,
+    ) -> Op:
+        if parallelism is None:
+            # Default: one lane per output element (elementwise-ish kernels);
+            # matmul/conv builders pass an explicit tile-level parallelism.
+            elems = sum(b for _, b in writes) / max(BYTES.get(precision, 2), 1)
+            parallelism = max(elems, 1.0)
+        op = Op(
+            name=name,
+            flops=float(flops),
+            reads=tuple((t, int(b)) for t, b in reads if b > 0),
+            writes=tuple((t, int(b)) for t, b in writes if b > 0),
+            precision=precision,
+            parallelism=float(parallelism),
+        )
+        self.ops.append(op)
+        return op
+
+    # -- aggregate properties --------------------------------------------------
+    @property
+    def total_flops(self) -> float:
+        return sum(op.flops for op in self.ops)
+
+    @property
+    def total_touch_bytes(self) -> int:
+        return sum(op.touch_bytes for op in self.ops)
+
+    def footprint_bytes(self) -> int:
+        """Unique bytes across all tensors (upper bound, no buffer reuse)."""
+        seen: dict[str, int] = {}
+        for op in self.ops:
+            for t, b in op.reads + op.writes:
+                seen[t] = max(seen.get(t, 0), b)
+        return sum(seen.values())
+
+    def peak_live_bytes(self) -> int:
+        """Allocator-peak proxy: a tensor is live from its first to its last
+        touch; persistent tensors (weights, optimizer state — anything both
+        read and written, or read before written) are live throughout. This
+        matches how the paper reports per-GPU 'memory footprint' (Table III).
+        """
+        first: dict[str, int] = {}
+        last: dict[str, int] = {}
+        size: dict[str, int] = {}
+        persistent: set[str] = set()
+        written: set[str] = set()
+        for i, op in enumerate(self.ops):
+            for t, b in op.reads:
+                first.setdefault(t, i)
+                last[t] = i
+                size[t] = max(size.get(t, 0), b)
+                if t not in written:
+                    persistent.add(t)  # read before ever written: lives across iters
+            for t, b in op.writes:
+                first.setdefault(t, i)
+                last[t] = i
+                size[t] = max(size.get(t, 0), b)
+                written.add(t)
+        n = len(self.ops)
+        delta = [0] * (n + 1)
+        base = 0
+        for t, s in size.items():
+            if t in persistent:
+                base += s
+            else:
+                delta[first[t]] += s
+                delta[last[t] + 1] -= s
+        peak, cur = 0, 0
+        for i in range(n):
+            cur += delta[i]
+            peak = max(peak, cur)
+        return base + peak
+
+    def touches(self) -> Iterable[tuple[int, str, int, bool]]:
+        """Flatten to (op_index, tensor, nbytes, is_write), reads first."""
+        for i, op in enumerate(self.ops):
+            for t, b in op.reads:
+                yield i, t, b, False
+            for t, b in op.writes:
+                yield i, t, b, True
+
+    def scaled(self, name: str, flop_scale: float, byte_scale: float) -> "Trace":
+        """Uniformly scaled copy (used for projection sensitivity tests)."""
+        out = Trace(name=name, batch_size=self.batch_size, kind=self.kind)
+        for op in self.ops:
+            out.ops.append(
+                Op(
+                    name=op.name,
+                    flops=op.flops * flop_scale,
+                    reads=tuple((t, int(b * byte_scale)) for t, b in op.reads),
+                    writes=tuple((t, int(b * byte_scale)) for t, b in op.writes),
+                    precision=op.precision,
+                    parallelism=op.parallelism,
+                )
+            )
+        return out
+
+
+def gemm_parallelism(m: int, n: int) -> float:
+    """Concurrency exposed by an (m,n) output GEMM tiled 128x128 per CTA.
+
+    Each 128x128 output tile occupies one CTA of ~256 threads on the modeled
+    machine; the returned number is in scalar-lane units comparable to
+    ``GpuSpec.concurrency``.
+    """
+    tiles = math.ceil(m / 128) * math.ceil(n / 128)
+    return float(tiles * 256)

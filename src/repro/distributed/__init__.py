@@ -1,0 +1,3 @@
+from repro.distributed.pipeline import bubble_fraction, pipeline_apply
+
+__all__ = ["bubble_fraction", "pipeline_apply"]

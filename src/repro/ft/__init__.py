@@ -1,0 +1,4 @@
+from repro.ft.watchdog import StepWatchdog, StragglerStats
+from repro.ft.elastic import ElasticRunner, RunState
+
+__all__ = ["StepWatchdog", "StragglerStats", "ElasticRunner", "RunState"]

@@ -1,0 +1,75 @@
+"""Elastic run control: checkpoint/restart across mesh-shape changes.
+
+``ElasticRunner`` owns the restart loop around a train function:
+
+    runner = ElasticRunner(ckpt_dir, build_state, train_segment)
+    runner.run(max_steps)
+
+* ``build_state(mesh, restore_step)`` constructs (params, opt_state, step)
+  — restoring and RESHARDING from the latest checkpoint when one exists
+  (the checkpoint layer stores arrays by name, so any mesh shape whose
+  shardings the caller provides will do: scale 16 hosts -> 12 hosts and the
+  same checkpoint restores onto the smaller mesh).
+* ``train_segment(state, steps)`` runs until it returns (completed) or
+  raises (hang/preemption) — the runner saves, rebuilds the mesh with
+  whatever devices are now healthy, and resumes.
+
+On real fleets mesh health comes from the cluster scheduler; here
+``mesh_factory`` abstracts it (tests inject shrinking device sets).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable
+
+from repro.checkpoint.ckpt import AsyncCheckpointer, latest_step, restore
+
+
+@dataclass
+class RunState:
+    params: object
+    opt_state: object
+    step: int
+    mesh: object = None
+    restarts: int = 0
+
+
+class ElasticRunner:
+    def __init__(self, ckpt_dir: str, mesh_factory: Callable[[], object],
+                 build_state: Callable, train_segment: Callable,
+                 max_restarts: int = 10, save_every: int = 100):
+        self.ckpt_dir = ckpt_dir
+        self.mesh_factory = mesh_factory
+        self.build_state = build_state
+        self.train_segment = train_segment
+        self.max_restarts = max_restarts
+        self.save_every = save_every
+        self.ckpt = AsyncCheckpointer(ckpt_dir)
+
+    def run(self, max_steps: int) -> RunState:
+        restarts = 0
+        while True:
+            mesh = self.mesh_factory()
+            start = latest_step(self.ckpt_dir)
+            state = self.build_state(mesh, start)
+            state.mesh = mesh
+            state.restarts = restarts
+            try:
+                state = self.train_segment(self, state, max_steps)
+                self.ckpt.wait()
+                return state
+            except Exception as e:  # noqa: BLE001 — restart-able failure
+                restarts += 1
+                if restarts > self.max_restarts:
+                    raise
+                print(f"[elastic] segment failed ({type(e).__name__}: {e}); "
+                      f"restart {restarts}/{self.max_restarts}")
+                time.sleep(0.1)
+
+    def maybe_save(self, state: RunState, force: bool = False):
+        if force or (state.step > 0 and state.step % self.save_every == 0):
+            self.ckpt.save_async(
+                state.step,
+                {"params": state.params, "opt": state.opt_state},
+                extra={"step": state.step})

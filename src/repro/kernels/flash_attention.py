@@ -1,0 +1,117 @@
+"""Pallas TPU flash-attention forward kernel.
+
+COPA's core insight — filter off-package traffic with on-package storage —
+is exactly what this kernel does in software: the (Sq x Skv) score matrix
+lives only in VMEM tiles; HBM sees Q, K, V, O once each.
+
+Grid: (batch*kv_heads, num_q_blocks, num_kv_blocks), kv innermost so the
+fp32 accumulator scratch persists across kv steps for a fixed q block.
+Block shapes are MXU-aligned (multiples of 128 on the contracting/lane dims
+when the head_dim allows).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                 scale: float, causal: bool, block_q: int, block_kv: int,
+                 num_kv: int, group: int):
+    """One (q-block, kv-block) tile. q_ref: (block_q*G, D) for a single
+    kv-head (queries of the G grouped heads stacked); k/v_ref: (block_kv, D)."""
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[...].reshape(group * block_q, -1).astype(jnp.float32)  # (G*Bq, D)
+    k = k_ref[...].reshape(block_kv, -1).astype(jnp.float32)         # (Bkv, D)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if causal:
+        iq = qi * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (group * block_q, block_kv), 0) % block_q
+        # row r of the stacked (G*Bq) dim maps to query index r % Bq... rows
+        # are laid out (G, Bq) flattened: query position = r mod block_q
+        ik = ki * block_kv + jax.lax.broadcasted_iota(
+            jnp.int32, (group * block_q, block_kv), 1)
+        s = jnp.where(ik <= iq, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * alpha + p.sum(axis=1, keepdims=True)
+    m_scr[...] = m_new
+    v = v_ref[...].reshape(block_kv, -1).astype(jnp.float32)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(ki == num_kv - 1)
+    def _finalize():
+        o = acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+        o_ref[...] = o.reshape(o_ref.shape).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal: bool = True,
+                           scale: float | None = None,
+                           block_q: int = 256, block_kv: int = 256,
+                           interpret: bool = False):
+    """q: (B,Sq,H,D); k/v: (B,Skv,KVH,D) -> (B,Sq,H,Dv).
+
+    GQA handled by stacking each kv-head's G query heads into the q block
+    rows, so the kernel sees 2D MXU-friendly tiles.
+    """
+    b, sq, h, d = q.shape
+    _, skv, kvh, dv = v.shape
+    g = h // kvh
+    scale = scale if scale is not None else d ** -0.5
+    block_q = min(block_q, sq)
+    block_kv = min(block_kv, skv)
+    assert sq % block_q == 0 and skv % block_kv == 0, (sq, skv, block_q, block_kv)
+    nq, nk = sq // block_q, skv // block_kv
+
+    # (B,S,H,D) -> (B*KVH, G, S, D) -> rows stacked (B*KVH, S*G... keep (G,Bq)
+    qr = (q.reshape(b, sq, kvh, g, d).transpose(0, 2, 3, 1, 4)
+          .reshape(b * kvh, g, sq, d))
+    kr = k.transpose(0, 2, 1, 3).reshape(b * kvh, skv, d)
+    vr = v.transpose(0, 2, 1, 3).reshape(b * kvh, skv, dv)
+
+    grid = (b * kvh, nq, nk)
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, causal=causal, block_q=block_q,
+        block_kv=block_kv, num_kv=nk, group=g)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, g, block_q, d),
+                         lambda bh, qi, ki: (bh, 0, qi, 0)),
+            pl.BlockSpec((1, block_kv, d), lambda bh, qi, ki: (bh, ki, 0)),
+            pl.BlockSpec((1, block_kv, dv), lambda bh, qi, ki: (bh, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, g, block_q, dv),
+                               lambda bh, qi, ki: (bh, 0, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * kvh, g, sq, dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g * block_q, 1), jnp.float32),
+            pltpu.VMEM((g * block_q, 1), jnp.float32),
+            pltpu.VMEM((g * block_q, dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    # (B*KVH, G, Sq, Dv) -> (B, Sq, H, Dv)
+    return (out.reshape(b, kvh, g, sq, dv).transpose(0, 3, 1, 2, 4)
+            .reshape(b, sq, h, dv))

@@ -1,0 +1,93 @@
+"""Pallas TPU flash-decode kernel: one query token vs a long KV cache.
+
+Decode is the paper's bandwidth-bound case par excellence: arithmetic
+intensity ~1 flop/byte, the KV cache is the whole working set. The kernel
+streams KV blocks HBM->VMEM once with online-softmax partials in VMEM
+scratch — the traffic floor is |K|+|V| exactly.
+
+Grid: (B*KVH, num_kv_blocks), kv innermost; the G grouped query heads for a
+kv head form the tile rows (G x D @ D x Bkv on the MXU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                   *, scale: float, block_kv: int, num_kv: int, group: int):
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[...].reshape(group, -1).astype(jnp.float32)        # (G, D)
+    k = k_ref[...].reshape(block_kv, -1).astype(jnp.float32)     # (Bkv, D)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    kv_len = len_ref[0]
+    ik = ki * block_kv + jax.lax.broadcasted_iota(jnp.int32, (group, block_kv), 1)
+    s = jnp.where(ik < kv_len, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * alpha + p.sum(axis=1, keepdims=True)
+    m_scr[...] = m_new
+    v = v_ref[...].reshape(block_kv, -1).astype(jnp.float32)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(ki == num_kv - 1)
+    def _finalize():
+        o = acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+        o_ref[...] = o.reshape(o_ref.shape).astype(o_ref.dtype)
+
+
+def flash_decode_pallas(q, k, v, kv_len, *, scale: float | None = None,
+                        block_kv: int = 512, interpret: bool = False):
+    """q: (B,H,D); k/v: (B,S,KVH,D); kv_len: scalar int32 -> (B,H,Dv)."""
+    b, h, d = q.shape
+    _, s, kvh, dv = v.shape
+    g = h // kvh
+    scale = scale if scale is not None else d ** -0.5
+    block_kv = min(block_kv, s)
+    assert s % block_kv == 0
+    nk = s // block_kv
+
+    qr = q.reshape(b, kvh, g, d).reshape(b * kvh, g, d)
+    kr = k.transpose(0, 2, 1, 3).reshape(b * kvh, s, d)
+    vr = v.transpose(0, 2, 1, 3).reshape(b * kvh, s, dv)
+    len_arr = jnp.full((1,), kv_len, jnp.int32)
+
+    kernel = functools.partial(_decode_kernel, scale=scale, block_kv=block_kv,
+                               num_kv=nk, group=g)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * kvh, nk),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, g, d), lambda bh, ki: (bh, 0, 0)),
+            pl.BlockSpec((1, block_kv, d), lambda bh, ki: (bh, ki, 0)),
+            pl.BlockSpec((1, block_kv, dv), lambda bh, ki: (bh, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, g, dv), lambda bh, ki: (bh, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * kvh, g, dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(len_arr, qr, kr, vr)
+    return out.reshape(b, h, dv)

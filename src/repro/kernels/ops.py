@@ -1,0 +1,44 @@
+"""jit'd dispatch wrappers for the Pallas kernels.
+
+On CPU (this container) kernels run in interpret mode for correctness
+validation; on TPU they compile natively. The model layer calls these via
+the ``pallas`` MSM policy.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.flash_decode import flash_decode_pallas
+from repro.kernels.fused_ffn import fused_ffn_pallas
+from repro.kernels.ssd_scan import ssd_scan_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "scale"))
+def flash_attention_op(q, k, v, *, causal: bool = True, scale=None):
+    return flash_attention_pallas(q, k, v, causal=causal, scale=scale,
+                                  interpret=not _on_tpu())
+
+
+@partial(jax.jit, static_argnames=("scale",))
+def flash_decode_op(q, k, v, kv_len, *, scale=None):
+    return flash_decode_pallas(q, k, v, kv_len, scale=scale,
+                               interpret=not _on_tpu())
+
+
+@jax.jit
+def fused_ffn_op(x, w_gate, w_up, w_down):
+    return fused_ffn_pallas(x, w_gate, w_up, w_down, interpret=not _on_tpu())
+
+
+@partial(jax.jit, static_argnames=("chunk",))
+def ssd_scan_op(x, dt, A, b_, c_, chunk: int = 128):
+    return ssd_scan_pallas(x, dt, A, b_, c_, chunk=chunk,
+                           interpret=not _on_tpu())

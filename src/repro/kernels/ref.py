@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool, scale: float | None = None):
+    """q: (B,Sq,H,D); k/v: (B,Skv,KVH,D) -> (B,Sq,H,Dv)."""
+    b, sq, h, d = q.shape
+    _, skv, kvh, _ = k.shape
+    g = h // kvh
+    scale = scale if scale is not None else d ** -0.5
+    qg = q.reshape(b, sq, kvh, g, d)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((sq, skv), bool), k=skv - sq)
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, v.shape[-1]).astype(q.dtype)
+
+
+def flash_decode_ref(q, k, v, kv_len, scale: float | None = None):
+    """q: (B,H,D); k/v: (B,S,KVH,D); kv_len scalar -> (B,H,Dv)."""
+    b, h, d = q.shape
+    _, s, kvh, _ = k.shape
+    g = h // kvh
+    scale = scale if scale is not None else d ** -0.5
+    qg = q.reshape(b, kvh, g, d)
+    sc = jnp.einsum("bhgd,bkhd->bhgk", qg.astype(jnp.float32),
+                    k.astype(jnp.float32)) * scale
+    mask = jnp.arange(s)[None, None, None, :] < kv_len
+    sc = jnp.where(mask, sc, -1e30)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p, v.astype(jnp.float32))
+    return out.reshape(b, h, v.shape[-1]).astype(q.dtype)
+
+
+def fused_ffn_ref(x, w_gate, w_up, w_down):
+    """SwiGLU: (T,D) @ (D,F)x2 -> silu(g)*u @ (F,D) -> (T,D)."""
+    g = x.astype(jnp.float32) @ w_gate.astype(jnp.float32)
+    u = x.astype(jnp.float32) @ w_up.astype(jnp.float32)
+    h = jax.nn.silu(g) * u
+    return (h @ w_down.astype(jnp.float32)).astype(x.dtype)
+
+
+def ssd_chunk_ref(x, dt, A, b_, c_, initial_state=None):
+    """Sequential SSD scan oracle (token-by-token recurrence).
+
+    x: (B,S,H,P); dt: (B,S,H); A: (H,); b_/c_: (B,S,N).
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    bsz, s, h, p = x.shape
+    n = b_.shape[-1]
+    st = (jnp.zeros((bsz, h, p, n), jnp.float32)
+          if initial_state is None else initial_state.astype(jnp.float32))
+
+    def step(st, inp):
+        xt, dtt, bt, ct = inp                     # (B,H,P) (B,H) (B,N) (B,N)
+        da = jnp.exp(dtt.astype(jnp.float32) * A[None, :])
+        dbx = jnp.einsum("bn,bh,bhp->bhpn", bt.astype(jnp.float32),
+                         dtt.astype(jnp.float32), xt.astype(jnp.float32))
+        st = st * da[:, :, None, None] + dbx
+        yt = jnp.einsum("bn,bhpn->bhp", ct.astype(jnp.float32), st)
+        return st, yt
+
+    st, ys = jax.lax.scan(
+        step, st,
+        (x.swapaxes(0, 1), dt.swapaxes(0, 1), b_.swapaxes(0, 1),
+         c_.swapaxes(0, 1)))
+    return ys.swapaxes(0, 1).astype(x.dtype), st

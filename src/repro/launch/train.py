@@ -1,0 +1,133 @@
+"""End-to-end training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b-smoke \
+        --steps 50 --global-batch 8 --seq-len 128 --ckpt-dir /tmp/run1
+
+Wires every substrate together: config -> model -> sharded train step ->
+deterministic data pipeline -> watchdog -> async checkpointing -> elastic
+restart. On this CPU container it trains reduced configs; on a TPU fleet the
+same driver runs the full ones (mesh via ``--mesh data,model``).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.configs as configs
+from repro.core import msm
+from repro.data.pipeline import DataConfig, DataLoader
+from repro.ft import ElasticRunner, RunState, StepWatchdog
+from repro.checkpoint.ckpt import restore, latest_step
+from repro.launch.mesh import make_host_mesh
+from repro.models import LanguageModel
+from repro.models.base import abstract_params
+from repro.sharding.partition import batch_spec, param_shardings
+from repro.train import OptimConfig, init_opt_state, make_train_step
+from repro.train.optim import state_shardings
+from jax.sharding import NamedSharding, PartitionSpec
+
+
+def build(args, mesh, restore_step=None):
+    cfg = configs.get(args.arch)
+    policy = msm.recommend("train_4k", cfg.n_params())
+    model = LanguageModel(cfg, impl=policy.attention_impl,
+                          remat=args.remat or policy.remat)
+    opt_cfg = OptimConfig(lr=args.lr, warmup_steps=20,
+                          total_steps=args.steps)
+    aparams = abstract_params(model.specs())
+    shardings = param_shardings(model.axes(), aparams, mesh)
+    jax.sharding.set_mesh(mesh)
+    if restore_step is not None:
+        _, tree, extra = restore(
+            args.ckpt_dir, restore_step,
+            shardings={"params": shardings,
+                       "opt": state_shardings(shardings, opt_cfg, mesh)})
+        params, opt_state = tree["params"], tree["opt"]
+        start = int(extra.get("step", restore_step))
+        print(f"[train] restored step {start} from {args.ckpt_dir}")
+    else:
+        params = jax.device_put(model.init(jax.random.PRNGKey(args.seed)),
+                                shardings)
+        opt_state = jax.device_put(
+            init_opt_state(params, opt_cfg),
+            state_shardings(shardings, opt_cfg, mesh))
+        start = 0
+    step_fn = make_train_step(model, opt_cfg, microbatches=args.microbatches,
+                              grad_shardings=shardings)
+    jitted = jax.jit(step_fn, donate_argnums=(0, 1))
+    return model, cfg, params, opt_state, jitted, start
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b-smoke")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--save-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--mesh-model", type=int, default=1)
+    args = ap.parse_args(argv)
+
+    def mesh_factory():
+        return make_host_mesh(model=args.mesh_model)
+
+    def build_state(mesh, restore_step):
+        model, cfg, params, opt, jitted, start = build(args, mesh, restore_step)
+        st = RunState(params=params, opt_state=opt, step=start, mesh=mesh)
+        st.model, st.cfg, st.jitted = model, cfg, jitted
+        return st
+
+    def train_segment(runner: ElasticRunner, st: RunState, max_steps: int):
+        cfg = st.cfg
+        data = DataLoader(
+            DataConfig(cfg.vocab_size, args.seq_len, args.global_batch,
+                       seed=args.seed),
+            start_step=st.step, process_index=0, process_count=1)
+        bspec = NamedSharding(st.mesh, batch_spec(st.mesh))
+        losses = []
+        with StepWatchdog(deadline_s=300.0) as wd:
+            try:
+                for step, batch in data:
+                    if step >= max_steps:
+                        break
+                    wd.check()
+                    wd.step_started()
+                    batch = {k: jax.device_put(v, bspec) for k, v in batch.items()}
+                    rng = jax.random.PRNGKey(step)
+                    st.params, st.opt_state, metrics = st.jitted(
+                        st.params, st.opt_state, batch, rng)
+                    dt = wd.step_finished()
+                    st.step = step + 1
+                    runner.maybe_save(st)
+                    loss = float(metrics["loss"])
+                    losses.append(loss)
+                    if step % args.log_every == 0:
+                        print(f"step {step:5d} loss {loss:8.4f} "
+                              f"gnorm {float(metrics['grad_norm']):7.3f} "
+                              f"dt {dt*1e3:7.1f}ms", flush=True)
+            finally:
+                data.close()
+        runner.maybe_save(st, force=True)
+        st.final_losses = losses
+        return st
+
+    runner = ElasticRunner(args.ckpt_dir, mesh_factory, build_state,
+                           train_segment, save_every=args.save_every)
+    st = runner.run(args.steps)
+    print(f"done at step {st.step}; final loss "
+          f"{np.mean(st.final_losses[-10:]):.4f}")
+    return st
+
+
+if __name__ == "__main__":
+    main()

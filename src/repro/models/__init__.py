@@ -1,0 +1,4 @@
+"""Model zoo: one composable LanguageModel over all assigned families."""
+from repro.models.lm import LanguageModel
+
+__all__ = ["LanguageModel"]

@@ -1,0 +1,108 @@
+"""Functional parameter machinery (no flax): specs -> init -> pytrees.
+
+Every module describes its parameters as a dict of :class:`P` specs carrying
+shape, *logical axis names* and an initializer. ``init_params`` materializes
+a pytree of arrays; ``axes_tree`` yields the parallel pytree of logical-axis
+tuples the sharding layer maps onto the mesh. Layer stacks get a leading
+``layers`` axis so the forward pass can ``lax.scan`` over them.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class P:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    init: str = "normal"        # normal | zeros | ones | small (0.006) | identity
+    scale: float | None = None  # override stddev
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+Specs = dict  # nested dict[str, P | Specs]
+
+
+def stack_specs(specs: Specs, n: int, axis_name: str = "layers") -> Specs:
+    """Add a leading stacked-layer dimension to every spec."""
+    out = {}
+    for k, v in specs.items():
+        if isinstance(v, P):
+            out[k] = replace(v, shape=(n,) + v.shape, axes=(axis_name,) + v.axes)
+        else:
+            out[k] = stack_specs(v, n, axis_name)
+    return out
+
+
+def _init_one(key, p: P, dtype) -> jax.Array:
+    if p.init == "zeros":
+        return jnp.zeros(p.shape, dtype)
+    if p.init == "ones":
+        return jnp.ones(p.shape, dtype)
+    fan_in = p.shape[-2] if len(p.shape) >= 2 else p.shape[-1]
+    std = p.scale if p.scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+    if p.init == "small":
+        std = 0.006
+    return (jax.random.normal(key, p.shape, jnp.float32) * std).astype(dtype)
+
+
+def init_params(specs: Specs, key: jax.Array, dtype=jnp.bfloat16):
+    flat: list[tuple[tuple, P]] = []
+
+    def walk(s, path):
+        for k, v in sorted(s.items()):
+            if isinstance(v, P):
+                flat.append((path + (k,), v))
+            else:
+                walk(v, path + (k,))
+
+    walk(specs, ())
+    keys = jax.random.split(key, max(len(flat), 1))
+    out: dict = {}
+    for (path, p), k in zip(flat, keys):
+        node = out
+        for seg in path[:-1]:
+            node = node.setdefault(seg, {})
+        node[path[-1]] = _init_one(k, p, dtype)
+    return out
+
+
+def abstract_params(specs: Specs, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct tree (for dry-run lowering without allocation)."""
+
+    def walk(s):
+        return {
+            k: (jax.ShapeDtypeStruct(v.shape, dtype) if isinstance(v, P) else walk(v))
+            for k, v in s.items()
+        }
+
+    return walk(specs)
+
+
+def axes_tree(specs: Specs):
+    def walk(s):
+        return {k: (v.axes if isinstance(v, P) else walk(v)) for k, v in s.items()}
+
+    return walk(specs)
+
+
+def count_params(specs: Specs) -> int:
+    total = 0
+
+    def walk(s):
+        nonlocal total
+        for v in s.values():
+            if isinstance(v, P):
+                total += int(np.prod(v.shape))
+            else:
+                walk(v)
+
+    walk(specs)
+    return total

@@ -1,0 +1,145 @@
+"""Per-family transformer blocks (pre-norm residual structure)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.base import Specs
+from repro.models.layers import ffn, ffn_specs, rmsnorm, rmsnorm_specs
+
+
+# ---- dense / GQA -----------------------------------------------------------------
+
+def dense_block_specs(cfg: ModelConfig) -> Specs:
+    a = attn.mla_specs(cfg) if cfg.use_mla else attn.gqa_specs(cfg)
+    return {
+        "ln1": rmsnorm_specs(cfg.d_model),
+        "attn": a,
+        "ln2": rmsnorm_specs(cfg.d_model),
+        "ffn": ffn_specs(cfg.d_model, cfg.d_ff),
+    }
+
+
+def dense_block(params, cfg: ModelConfig, x, positions, impl="chunked",
+                causal=True):
+    h = rmsnorm(params["ln1"], x, cfg.norm_eps)
+    if cfg.use_mla:
+        h = attn.mla_attention(params["attn"], cfg, h, positions, causal=causal,
+                               impl=impl)
+    else:
+        h = attn.gqa_attention(params["attn"], cfg, h, positions, causal=causal,
+                               impl=impl)
+    x = x + h
+    h = rmsnorm(params["ln2"], x, cfg.norm_eps)
+    return x + ffn(params["ffn"], h)
+
+
+# ---- MoE -------------------------------------------------------------------------
+
+def moe_block_specs(cfg: ModelConfig, dense_ffn: bool) -> Specs:
+    a = attn.mla_specs(cfg) if cfg.use_mla else attn.gqa_specs(cfg)
+    s: Specs = {
+        "ln1": rmsnorm_specs(cfg.d_model),
+        "attn": a,
+        "ln2": rmsnorm_specs(cfg.d_model),
+    }
+    if dense_ffn:
+        s["ffn"] = ffn_specs(cfg.d_model, cfg.dense_d_ff or cfg.d_ff)
+    else:
+        s["moe"] = moe_mod.moe_specs(cfg)
+    return s
+
+
+def moe_block(params, cfg: ModelConfig, x, positions, impl="chunked"):
+    h = rmsnorm(params["ln1"], x, cfg.norm_eps)
+    if cfg.use_mla:
+        h = attn.mla_attention(params["attn"], cfg, h, positions, impl=impl)
+    else:
+        h = attn.gqa_attention(params["attn"], cfg, h, positions, impl=impl)
+    x = x + h
+    h = rmsnorm(params["ln2"], x, cfg.norm_eps)
+    if "ffn" in params:
+        return x + ffn(params["ffn"], h), jnp.zeros((), jnp.float32)
+    y, aux = moe_mod.moe_ffn(params["moe"], cfg, h)
+    return x + y, aux
+
+
+# ---- SSM (Mamba-2) -----------------------------------------------------------------
+
+def mamba_block_specs(cfg: ModelConfig) -> Specs:
+    return {"ln": rmsnorm_specs(cfg.d_model), "mixer": ssm_mod.ssm_specs(cfg)}
+
+
+def mamba_block(params, cfg: ModelConfig, x):
+    h = rmsnorm(params["ln"], x, cfg.norm_eps)
+    y, _ = ssm_mod.mamba2_forward(params["mixer"], cfg, h)
+    return x + y
+
+
+def mamba_block_decode(params, cfg: ModelConfig, x, conv_state, ssm_state):
+    h = rmsnorm(params["ln"], x, cfg.norm_eps)
+    y, (cs, ss) = ssm_mod.mamba2_decode(params["mixer"], cfg, h, conv_state,
+                                        ssm_state)
+    return x + y, cs, ss
+
+
+# ---- Zamba-style shared attention block ----------------------------------------------
+
+def shared_attn_block_specs(cfg: ModelConfig) -> Specs:
+    return {
+        "ln1": rmsnorm_specs(cfg.d_model),
+        "attn": attn.gqa_specs(cfg),
+        "ln2": rmsnorm_specs(cfg.d_model),
+        "ffn": ffn_specs(cfg.d_model, cfg.d_ff),
+    }
+
+
+def shared_attn_block(params, cfg: ModelConfig, x, positions, impl="chunked"):
+    h = rmsnorm(params["ln1"], x, cfg.norm_eps)
+    h = attn.gqa_attention(params["attn"], cfg, h, positions, impl=impl)
+    x = x + h
+    h = rmsnorm(params["ln2"], x, cfg.norm_eps)
+    return x + ffn(params["ffn"], h)
+
+
+# ---- encoder/decoder (Whisper backbone) ------------------------------------------------
+
+def encoder_block_specs(cfg: ModelConfig) -> Specs:
+    return dense_block_specs(cfg)
+
+
+def encoder_block(params, cfg: ModelConfig, x, positions, impl="chunked"):
+    return dense_block(params, cfg, x, positions, impl=impl, causal=False)
+
+
+def decoder_block_specs(cfg: ModelConfig) -> Specs:
+    s = dense_block_specs(cfg)
+    s["ln_cross"] = rmsnorm_specs(cfg.d_model)
+    s["cross"] = attn.gqa_specs(cfg)
+    return s
+
+
+def decoder_block(params, cfg: ModelConfig, x, enc_out, positions,
+                  enc_positions, impl="chunked"):
+    h = rmsnorm(params["ln1"], x, cfg.norm_eps)
+    h = attn.gqa_attention(params["attn"], cfg, h, positions, causal=True,
+                           impl=impl)
+    x = x + h
+    # cross attention: queries from decoder, keys/values from encoder output
+    h = rmsnorm(params["ln_cross"], x, cfg.norm_eps)
+    b, s, _ = h.shape
+    q = jnp.einsum("bsd,de->bse", h, params["cross"]["wq"]).reshape(
+        b, s, cfg.n_heads, cfg.head_dim)
+    k = jnp.einsum("bsd,de->bse", enc_out, params["cross"]["wk"]).reshape(
+        b, enc_out.shape[1], cfg.n_kv_heads, cfg.head_dim)
+    v = jnp.einsum("bsd,de->bse", enc_out, params["cross"]["wv"]).reshape(
+        b, enc_out.shape[1], cfg.n_kv_heads, cfg.head_dim)
+    o = attn.sdpa(q, k, v, causal=False, impl=impl)
+    x = x + jnp.einsum("bse,ed->bsd", o.reshape(b, s, -1),
+                       params["cross"]["wo"])
+    h = rmsnorm(params["ln2"], x, cfg.norm_eps)
+    return x + ffn(params["ffn"], h)

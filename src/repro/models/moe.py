@@ -1,0 +1,119 @@
+"""Mixture-of-Experts: top-k routing with sort-based grouped dispatch.
+
+Design (TPU-native, compile-friendly at 128-160 experts):
+
+* Router: softmax top-k over expert logits, optional shared experts
+  (DeepSeek-style) always active.
+* Dispatch: tokens are *sorted by expert id* and packed into a fixed
+  ``(E, capacity)`` grid (GShard-style capacity factor; overflow drops with
+  renormalized combine weights). The grouped tensor carries logical axes
+  ``("experts", "expert_cap", "embed")`` so expert parallelism shards the
+  leading axis over the ``model`` mesh axis; XLA SPMD materializes the
+  all-to-all around the gather/scatter.
+* Expert FFN: one einsum over the expert axis (SwiGLU), weights
+  ``(E, d, ff)`` sharded on E.
+
+The auxiliary load-balance loss (Switch-style) is returned for training.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.base import P, Specs
+from repro.models.layers import ffn, ffn_specs
+
+
+def moe_specs(cfg: ModelConfig) -> Specs:
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    s: Specs = {
+        "router": P((d, e), ("embed", "experts"), init="small"),
+        "w_gate": P((e, d, f), ("experts", "embed", "ff")),
+        "w_up": P((e, d, f), ("experts", "embed", "ff")),
+        "w_down": P((e, f, d), ("experts", "ff", "embed")),
+    }
+    if cfg.n_shared_experts:
+        s["shared"] = ffn_specs(d, cfg.moe_d_ff * cfg.n_shared_experts)
+    return s
+
+
+def _capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    from repro.sharding.optflags import opt
+
+    cf = 1.0 if opt("moe_cf1") else cfg.capacity_factor
+    cap = int(n_tokens * cfg.top_k * cf / cfg.n_experts)
+    return max(8, ((cap + 7) // 8) * 8)
+
+
+def route(params, cfg: ModelConfig, x2d):
+    """x2d: (T, d) -> (weights (T,k), experts (T,k), aux_loss)."""
+    logits = jnp.einsum("td,de->te", x2d, params["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, experts = jax.lax.top_k(probs, cfg.top_k)
+    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balance aux loss.
+    e = cfg.n_experts
+    me = probs.mean(axis=0)
+    ce = jnp.zeros((e,), jnp.float32).at[experts.reshape(-1)].add(
+        1.0 / (experts.size)
+    )
+    aux = e * jnp.sum(me * ce)
+    return weights.astype(x2d.dtype), experts, aux
+
+
+def moe_ffn(params, cfg: ModelConfig, x):
+    """x: (B, S, d) -> (B, S, d), aux_loss."""
+    b, s, d = x.shape
+    t = b * s
+    x2d = x.reshape(t, d)
+    weights, experts, aux = route(params, cfg, x2d)
+    k, e = cfg.top_k, cfg.n_experts
+    cap = _capacity(t, cfg)
+
+    # ---- sort-based packing into (E, cap) ----
+    flat_expert = experts.reshape(-1)                      # (T*k,)
+    flat_token = jnp.repeat(jnp.arange(t), k)              # (T*k,)
+    flat_weight = weights.reshape(-1)
+    order = jnp.argsort(flat_expert, stable=True)
+    se, st, sw = flat_expert[order], flat_token[order], flat_weight[order]
+    # position within its expert group
+    ones = jnp.ones_like(se)
+    pos_in_e = jnp.cumsum(ones) - 1
+    group_start = jnp.searchsorted(se, jnp.arange(e), side="left")
+    slot = pos_in_e - group_start[se]                      # 0-based within expert
+    keep = slot < cap
+    # scatter token ids into the (E, cap) grid; empty slots point at T (zeros
+    # row); overflow entries scatter out-of-bounds and are dropped.
+    slot_or_oob = jnp.where(keep, slot, cap).astype(jnp.int32)
+    grid_tok = jnp.full((e, cap), t, jnp.int32)
+    grid_w = jnp.zeros((e, cap), flat_weight.dtype)
+    grid_tok = grid_tok.at[se, slot_or_oob].set(st.astype(jnp.int32), mode="drop")
+    grid_w = grid_w.at[se, slot_or_oob].set(sw, mode="drop")
+
+    x_pad = jnp.concatenate([x2d, jnp.zeros((1, d), x2d.dtype)], axis=0)
+    xg = x_pad[grid_tok]                                   # (E, cap, d)
+    # Pin the grouped layout: experts over the model axis (EP), capacity over
+    # data — the SPMD partitioner otherwise materializes (E, cap, d) fully
+    # replicated (tens of GiB at 160 experts).
+    from repro.sharding.partition import constrain
+
+    xg = constrain(xg, "model", "data", None)
+
+    # ---- expert SwiGLU over the expert axis ----
+    g = jnp.einsum("ecd,edf->ecf", xg, params["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", xg, params["w_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(xg.dtype) * u
+    h = constrain(h, "model", "data", None)
+    yg = jnp.einsum("ecf,efd->ecd", h, params["w_down"])   # (E, cap, d)
+    yg = constrain(yg, "model", "data", None)
+
+    # ---- combine: weighted scatter back to tokens ----
+    yw = yg * grid_w[..., None].astype(yg.dtype)
+    y2d = jnp.zeros((t + 1, d), yg.dtype).at[grid_tok.reshape(-1)].add(
+        yw.reshape(-1, d), mode="drop")[:t]
+    y2d = constrain(y2d, "data", None)
+
+    if cfg.n_shared_experts:
+        y2d = y2d + ffn(params["shared"], x2d)
+    return y2d.reshape(b, s, d), aux

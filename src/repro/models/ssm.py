@@ -1,0 +1,178 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) in pure JAX.
+
+Chunked SSD algorithm: within a chunk the token mixing is the quadratic
+"attention-like" form; across chunks a linear recurrence carries the
+(heads, head_dim, state) SSM state. Both forms never materialize anything
+larger than (chunk x chunk) per head — the same VMEM-filtering structure the
+paper's L3 provides in hardware, which is why this layer is also one of our
+Pallas kernel targets.
+
+Decode keeps O(1)-in-sequence state: (conv window, SSM state).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.base import P, Specs
+
+
+def ssm_specs(cfg: ModelConfig) -> Specs:
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_ch = di + 2 * n
+    return {
+        "in_proj": P((d, 2 * di + 2 * n + h), ("embed", "ff")),
+        "conv_w": P((cfg.ssm_conv, conv_ch), (None, "ff"), init="small"),
+        "conv_b": P((conv_ch,), ("ff",), init="zeros"),
+        "A_log": P((h,), ("heads",), init="zeros"),
+        "D": P((h,), ("heads",), init="ones"),
+        "dt_bias": P((h,), ("heads",), init="zeros"),
+        "norm": P((di,), ("ff",), init="ones"),
+        "out_proj": P((di, d), ("ff", "embed")),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt):
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    x = zxbcdt[..., di:2 * di]
+    b_ = zxbcdt[..., 2 * di:2 * di + n]
+    c_ = zxbcdt[..., 2 * di + n:2 * di + 2 * n]
+    dt = zxbcdt[..., 2 * di + 2 * n:]
+    return z, x, b_, c_, dt
+
+
+def _causal_conv(params, xbc, conv_state=None):
+    """Depthwise causal conv over (B,S,C). Returns (out, new_state)."""
+    kw = params["conv_w"].shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((xbc.shape[0], kw - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = conv_state
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    out = jnp.zeros_like(xbc)
+    for i in range(kw):
+        out = out + xp[:, i:i + xbc.shape[1]] * params["conv_w"][i]
+    out = jax.nn.silu((out + params["conv_b"]).astype(jnp.float32)).astype(xbc.dtype)
+    new_state = xp[:, xp.shape[1] - (kw - 1):]
+    return out, new_state
+
+
+def ssd_chunked(x, dt, A, b_, c_, chunk: int, initial_state=None,
+                head_block: int = 8):
+    """SSD scan. x: (B,S,H,P); dt: (B,S,H); A: (H,) (negative);
+    b_/c_: (B,S,N). Returns (y (B,S,H,P), final_state (B,H,P,N)).
+
+    Structure: ``lax.scan`` over chunks carries the SSM state; within a
+    chunk the quadratic intra-chunk term is evaluated per head-block
+    (sequential ``lax.map``) so the largest transient is
+    (B, L, L, head_block) — the compile-memory analogue of the Pallas
+    kernel's VMEM tiling.
+    """
+    bsz, s, h, p = x.shape
+    n = b_.shape[-1]
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_ = jnp.pad(b_, ((0, 0), (0, pad), (0, 0)))
+        c_ = jnp.pad(c_, ((0, 0), (0, pad), (0, 0)))
+    nc = x.shape[1] // chunk
+    hb = min(head_block, h)
+    nhb = h // hb if h % hb == 0 else 1
+    if h % hb != 0:
+        hb = h
+    xc = x.reshape(bsz, nc, chunk, h, p).transpose(1, 0, 2, 3, 4)
+    dtc = dt.reshape(bsz, nc, chunk, h).transpose(1, 0, 2, 3)
+    bc = b_.reshape(bsz, nc, chunk, n).transpose(1, 0, 2, 3)
+    cc = c_.reshape(bsz, nc, chunk, n).transpose(1, 0, 2, 3)
+    tril = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    @jax.checkpoint
+    def chunk_step(state, inp):
+        xz, dtz, bz, cz = inp          # (B,L,H,P) (B,L,H) (B,L,N) (B,L,N)
+        dA = dtz.astype(jnp.float32) * A[None, None, :]
+        seg = jnp.cumsum(dA, axis=1)                      # (B,L,H)
+        total = seg[:, -1]                                # (B,H)
+        cb = jnp.einsum("bin,bjn->bij", cz.astype(jnp.float32),
+                        bz.astype(jnp.float32))           # (B,L,L)
+        xdt = xz.astype(jnp.float32) * dtz.astype(jnp.float32)[..., None]
+
+        def hb_fn(args):
+            seg_h, xdt_h = args        # (B,L,hb), (B,L,hb,P)
+            decay = jnp.exp(seg_h[:, :, None, :] - seg_h[:, None, :, :])
+            decay = jnp.where(tril[None, :, :, None], decay, 0.0)
+            att = cb[..., None] * decay                   # (B,L,L,hb)
+            return jnp.einsum("bijh,bjhp->bihp", att, xdt_h)
+
+        seg_b = jnp.moveaxis(seg.reshape(bsz, chunk, nhb, hb), 2, 0)
+        xdt_b = jnp.moveaxis(xdt.reshape(bsz, chunk, nhb, hb, p), 2, 0)
+        y_diag = jax.lax.map(hb_fn, (seg_b, xdt_b))       # (nhb,B,L,hb,P)
+        y_diag = jnp.moveaxis(y_diag, 0, 2).reshape(bsz, chunk, h, p)
+
+        # inter-chunk output from the carried state at chunk start
+        y_off = jnp.einsum("bin,bih,bhpn->bihp", cz.astype(jnp.float32),
+                           jnp.exp(seg), state)
+        # state update
+        decay_out = jnp.exp(total[:, None, :] - seg)      # (B,L,H)
+        states_z = jnp.einsum("bjn,bjh,bjhp->bhpn", bz.astype(jnp.float32),
+                              dtz.astype(jnp.float32) * decay_out,
+                              xz.astype(jnp.float32))
+        new_state = states_z + jnp.exp(total)[:, :, None, None] * state
+        return new_state, (y_diag + y_off).astype(x.dtype)
+
+    init = (jnp.zeros((bsz, h, p, n), jnp.float32)
+            if initial_state is None else initial_state.astype(jnp.float32))
+    final_state, ys = jax.lax.scan(chunk_step, init, (xc, dtc, bc, cc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(bsz, nc * chunk, h, p)
+    return y[:, :s], final_state
+
+
+def mamba2_forward(params, cfg: ModelConfig, x, chunk: int | None = None):
+    """Full Mamba-2 mixer over (B,S,d). Returns (y, (conv_state, ssm_state))."""
+    di, h, p = cfg.d_inner, cfg.ssm_heads, cfg.ssm_head_dim
+    zxbcdt = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    z, xin, b_, c_, dt = _split_proj(cfg, zxbcdt)
+    xbc = jnp.concatenate([xin, b_, c_], axis=-1)
+    xbc, conv_state = _causal_conv(params, xbc)
+    xin, b_, c_ = xbc[..., :di], xbc[..., di:di + cfg.ssm_state], xbc[..., di + cfg.ssm_state:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    xh = xin.reshape(*xin.shape[:2], h, p)
+    y, ssm_state = ssd_chunked(xh, dt, A, b_, c_, chunk or cfg.ssm_chunk)
+    y = y + xh * params["D"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(*x.shape[:2], di)
+    # gated RMSNorm then out-projection (Mamba-2 block structure)
+    yz = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    var = jnp.mean(jnp.square(yz.astype(jnp.float32)), -1, keepdims=True)
+    yz = (yz.astype(jnp.float32) * jax.lax.rsqrt(var + cfg.norm_eps)
+          * params["norm"].astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("bse,ed->bsd", yz, params["out_proj"]), (conv_state, ssm_state)
+
+
+def mamba2_decode(params, cfg: ModelConfig, x, conv_state, ssm_state):
+    """Single-token step. x: (B,1,d); conv_state: (B,kw-1,C);
+    ssm_state: (B,H,P,N)."""
+    di, h, p, n = cfg.d_inner, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    zxbcdt = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    z, xin, b_, c_, dt = _split_proj(cfg, zxbcdt)
+    xbc = jnp.concatenate([xin, b_, c_], axis=-1)
+    xbc, conv_state = _causal_conv(params, xbc, conv_state)
+    xin, b_, c_ = xbc[..., :di], xbc[..., di:di + n], xbc[..., di + n:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    xh = xin.reshape(x.shape[0], h, p)
+    dt1 = dt[:, 0]                                        # (B,H)
+    dA = jnp.exp(dt1 * A[None, :])                        # (B,H)
+    dbx = jnp.einsum("bn,bh,bhp->bhpn", b_[:, 0].astype(jnp.float32),
+                     dt1, xh.astype(jnp.float32))
+    ssm_state = ssm_state * dA[:, :, None, None] + dbx
+    y = jnp.einsum("bn,bhpn->bhp", c_[:, 0].astype(jnp.float32), ssm_state)
+    y = y.astype(x.dtype) + xh * params["D"][None, :, None].astype(x.dtype)
+    y = y.reshape(x.shape[0], 1, di)
+    yz = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    var = jnp.mean(jnp.square(yz.astype(jnp.float32)), -1, keepdims=True)
+    yz = (yz.astype(jnp.float32) * jax.lax.rsqrt(var + cfg.norm_eps)
+          * params["norm"].astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("bse,ed->bsd", yz, params["out_proj"]), (conv_state, ssm_state)

@@ -1,0 +1,8 @@
+from repro.sharding.partition import (LOGICAL_RULES, batch_spec,
+                                      cache_shardings, param_shardings,
+                                      resolve_spec)
+
+__all__ = [
+    "LOGICAL_RULES", "batch_spec", "cache_shardings", "param_shardings",
+    "resolve_spec",
+]

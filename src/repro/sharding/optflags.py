@@ -1,0 +1,31 @@
+"""Beyond-paper optimization flags (the §Perf hillclimb knobs).
+
+Enabled via ``REPRO_OPTS=gqa_expand_kv,serve_nofsdp,kv_int8`` so every
+hillclimb change can be measured against the untouched baseline with the
+same code tree.
+
+* ``gqa_expand_kv`` — replicate KV heads to the full query-head count before
+  flash attention. The grouped (kvh, g) reshape defeats SPMD propagation
+  when kvh doesn't divide the model axis: XLA replicates the whole attention
+  computation across TP shards (observed 16-33x dot-FLOP inflation at 32k
+  prefill). Expanded KV keeps the head dim = n_heads, which shards cleanly.
+* ``serve_nofsdp`` — serving weights TP-shard only (replicated over data):
+  removes the per-step FSDP weight all-gather, which dominates the decode
+  collective term with no optimizer state to justify it.
+* ``kv_int8`` — int8 KV cache: halves the decode memory term (decode AI ~1).
+* ``attn_gather_once`` — pin q/k/v to their attention layout (batch over
+  data, heads over model, full sequence) BEFORE the flash block scans. With
+  sequence-parallel residuals, leaving the reshard to SPMD propagation makes
+  XLA re-gather the sequence inside every (q-block x kv-block) scan step —
+  observed ~60x collective-byte inflation on dense train cells.
+"""
+from __future__ import annotations
+
+import os
+
+ENABLED = frozenset(
+    x.strip() for x in (os.environ.get("REPRO_OPTS") or "").split(",") if x)
+
+
+def opt(name: str) -> bool:
+    return name in ENABLED

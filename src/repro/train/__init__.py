@@ -1,0 +1,5 @@
+from repro.train.optim import OptimConfig, init_state, apply_updates, lr_at, state_shardings
+from repro.train.step import make_train_step, init_opt_state
+
+__all__ = ["OptimConfig", "init_state", "apply_updates", "lr_at",
+           "state_shardings", "make_train_step", "init_opt_state"]

@@ -1,0 +1,70 @@
+"""HPC proxy population for the paper's Fig 3 DRAM-bandwidth study.
+
+The paper sweeps 130 HPC workloads (CORAL/CORAL-2, Amber18, FUN3D,
+SPECFEM3D, GROMACS, Laghos, RELION) and finds them remarkably insensitive to
+DRAM bandwidth: +5% geomean at infinite BW, -4% at 0.75x, -14% at 0.5x. The
+asymmetry is the signature of a population whose kernels sit mostly *above*
+the machine-balance point (FP32/FP64 arithmetic intensity >> 9 flop/byte on
+GPU-N after L2 filtering): lowering BW drags borderline kernels below the
+roofline ridge, while raising BW frees only the few already-bound ones.
+
+We reproduce that population: 130 deterministic proxy apps, each a mix of
+phase-kernels whose post-L2 arithmetic intensities are drawn (seeded) from a
+lognormal centred above machine balance. Traces use streaming tensors so the
+cache hierarchy is already accounted (HPC's L2 locality is folded into the
+post-L2 AI, as the paper's own Fig 3 does by construction).
+"""
+from __future__ import annotations
+
+from functools import lru_cache
+
+import numpy as np
+
+from repro.core.trace import Trace
+
+APP_FAMILIES = [
+    ("amber", 12), ("gromacs", 10), ("laghos", 8), ("relion", 8),
+    ("specfem3d", 8), ("fun3d", 10), ("coral_qmcpack", 10), ("coral_lammps", 10),
+    ("coral_nekbone", 8), ("coral_amg", 8), ("coral2_quicksilver", 8),
+    ("coral2_pennant", 8), ("coral2_big", 10), ("misc_cfd", 12),
+]  # totals 130
+
+# Lognormal over post-L2 arithmetic intensity (flop/byte, FP32-class math).
+# GPU-N machine balance is 24.2 TFLOPS / 2.687 TB/s ~= 9 flop/byte.
+_AI_MU = float(np.log(19.0))
+_AI_SIGMA = 0.90
+_PHASES = 6
+
+
+@lru_cache(maxsize=1)
+def hpc_suite() -> list[Trace]:
+    rng = np.random.default_rng(20210401)  # paper's arXiv month
+    traces: list[Trace] = []
+    idx = 0
+    for family, count in APP_FAMILIES:
+        for k in range(count):
+            tr = Trace(f"hpc.{family}.{k}", kind="hpc")
+            n_phases = int(rng.integers(3, _PHASES + 1))
+            weights = rng.dirichlet(np.ones(n_phases))
+            total_flops = float(rng.uniform(0.5e12, 5e12))
+            for p in range(n_phases):
+                ai = float(rng.lognormal(_AI_MU, _AI_SIGMA))
+                flops = total_flops * float(weights[p])
+                nbytes = flops / ai
+                # ~12% of phases are latency/occupancy-limited (sparse,
+                # irregular), matching the long tail in the paper's Fig 3.
+                par = float("inf")
+                if rng.random() < 0.12:
+                    par = float(rng.uniform(3e4, 2e5))
+                tr.emit(
+                    f"phase{p}",
+                    flops=flops,
+                    reads=[(f"in.{family}.{idx}.{p}.r", int(nbytes * 0.7))],
+                    writes=[(f"in.{family}.{idx}.{p}.w", int(nbytes * 0.3))],
+                    precision="fp32",
+                    parallelism=par,
+                )
+            traces.append(tr)
+            idx += 1
+    assert len(traces) == 130
+    return traces

@@ -1,0 +1,120 @@
+"""Perf-model invariants + paper-claim validation (loose tolerances)."""
+import numpy as np
+import pytest
+
+from repro.core import copa, hw, perfmodel
+from repro.core.hw import MB
+from repro.workloads import mlperf
+from repro.workloads.hpc import hpc_suite
+
+PM_CACHE = {}
+
+
+def pm(trace):
+    if trace.name not in PM_CACHE:
+        PM_CACHE[trace.name] = perfmodel.PerfModel(trace)
+    return PM_CACHE[trace.name]
+
+
+def test_segments_sum_to_total():
+    r = pm(mlperf.training_trace("resnet", "large")).run(hw.GPU_N)
+    assert abs(sum(r.segments.values()) - r.time_s) < 1e-9
+
+
+def test_idealization_monotone():
+    m = pm(mlperf.training_trace("transformer", "large"))
+    t_act = m.time(hw.GPU_N)
+    t1 = m.time(hw.GPU_N, ideal_dram=True)
+    t2 = m.time(hw.GPU_N, ideal_dram=True, ideal_mem_other=True)
+    t3 = m.time(hw.GPU_N, ideal_dram=True, ideal_mem_other=True,
+                ideal_occupancy=True)
+    assert t_act >= t1 >= t2 >= t3 > 0
+
+
+def test_more_bandwidth_never_slower():
+    m = pm(mlperf.inference_trace("resnet", "large"))
+    fast = hw.GPU_N.with_(dram_bandwidth=hw.GPU_N.dram_bandwidth * 2)
+    assert m.time(fast) <= m.time(hw.GPU_N) + 1e-12
+
+
+def test_bigger_cache_never_slower():
+    m = pm(mlperf.training_trace("resnet", "large"))
+    big = hw.GPU_N.with_(l2_capacity=hw.GPU_N.l2_capacity * 8)
+    assert m.time(big) <= m.time(hw.GPU_N) + 1e-12
+
+
+def test_copa_configs_ordered():
+    """Perfect L2 bounds every COPA config; every COPA config >= GPU-N."""
+    m = pm(mlperf.training_trace("resnet", "large"))
+    t_base = m.time(hw.GPU_N)
+    t_perfect = m.time(copa.PERFECT_L2.build())
+    for cfg in (copa.HBM_L3, copa.HBML_L3, copa.HBM_L3L, copa.HBML_L3L):
+        t = m.time(cfg.build())
+        assert t_perfect - 1e-12 <= t <= t_base + 1e-12, cfg.name
+
+
+# --- paper-claim regression tests (the §Paper-claims table) -------------------
+
+def _geo(xs):
+    return float(np.exp(np.mean(np.log(list(xs)))))
+
+
+def test_paper_fig2_training_dram_fraction():
+    fracs = []
+    for n in mlperf.TRAIN_BATCHES:
+        for s in ("large", "small"):
+            r = pm(mlperf.training_trace(n, s)).run(hw.GPU_N)
+            fracs.append(r.segments["DRAM BW"] / r.time_s)
+    # paper: 28% mean across large+small training
+    assert 0.18 <= np.mean(fracs) <= 0.38
+
+
+def test_paper_fig11_hbml_l3_training():
+    spec = copa.HBML_L3.build()
+    sp = _geo(pm(mlperf.training_trace(n, "large")).time(hw.GPU_N)
+              / pm(mlperf.training_trace(n, "large")).time(spec)
+              for n in mlperf.TRAIN_BATCHES)
+    # paper: +31% large-batch training
+    assert 1.20 <= sp <= 1.45
+
+
+def test_paper_fig11_hbm_l3_training():
+    spec = copa.HBM_L3.build()
+    sp = _geo(pm(mlperf.training_trace(n, "large")).time(hw.GPU_N)
+              / pm(mlperf.training_trace(n, "large")).time(spec)
+              for n in mlperf.TRAIN_BATCHES)
+    # paper: +21%
+    assert 1.10 <= sp <= 1.35
+
+
+def test_paper_fig3_hpc_insensitivity():
+    pms = [perfmodel.PerfModel(t) for t in hpc_suite()]
+    base = [p.time(hw.GPU_N) for p in pms]
+    inf_bw = hw.GPU_N.with_(dram_bandwidth=1e20)
+    sp_inf = _geo(b / p.time(inf_bw) for b, p in zip(base, pms))
+    half = hw.GPU_N.with_(dram_bandwidth=hw.GPU_N.dram_bandwidth * 0.5)
+    sp_half = _geo(b / p.time(half) for b, p in zip(base, pms))
+    assert sp_inf <= 1.10          # paper: +5%
+    assert 0.78 <= sp_half <= 0.92  # paper: -14%
+
+
+def test_paper_fig4_inference_traffic_collapse():
+    from repro.core.cachesim import dram_traffic_sweep
+
+    reds = []
+    for t in mlperf.inference_suite("large"):
+        sweep = dram_traffic_sweep(t, [60 * MB, 1020 * MB])
+        reds.append(min(sweep[60 * MB] / max(sweep[1020 * MB], 1e-9), 1e3))
+    # paper: 16x geomean at 960MB L3 (+60MB L2)
+    assert _geo(reds) >= 6.0
+
+
+def test_footprints_within_regime_of_table3():
+    # per-GPU footprints should land within ~3x of the paper's Table III
+    # (proxy models regenerated from public architectures, not NVIDIA's
+    # internal traces; BN/activation fusion choices move vision footprints)
+    targets = {"resnet": 6.0, "ssd": 7.9, "maskrcnn": 9.9, "minigo": 1.5,
+               "gnmt": 8.3, "transformer": 7.9, "ncf": 4.5}
+    for name, tgt in targets.items():
+        got = mlperf.training_trace(name, "large").peak_live_bytes() / 2**30
+        assert tgt / 3.0 <= got <= tgt * 3.0, (name, got, tgt)
