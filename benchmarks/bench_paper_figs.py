@@ -3,17 +3,29 @@
 Each function emits ``name,us_per_call,derived`` rows; ``derived`` carries
 the figure's headline metric next to the paper's reported value so the
 reproduction gap is visible in raw CSV.
+
+Every figure is one :class:`~repro.core.sweep.SweepEngine` grid: the engine
+shares each trace's touch stream and batches all cache capacities a figure
+needs into a single vectorized traffic pass, so the whole paper evaluation
+is O(one trace walk per workload) instead of O(one per (workload, config)).
 """
 from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import Csv, geomean, infer_models, timed, train_models
+from benchmarks.common import (
+    Csv,
+    geomean,
+    suite_scenarios,
+    suite_trace_names,
+    timed,
+)
 from repro.core import copa, hw, perfmodel
-from repro.core.cachesim import dram_traffic_sweep
 from repro.core.hw import GB, MB
+from repro.core.sweep import SweepEngine
 from repro.workloads import mlperf
-from repro.workloads.hpc import hpc_suite
+from repro.workloads.registry import scenario
+from repro.workloads.registry import suite as registry_suite
 
 
 def bench_table1(csv: Csv):
@@ -37,13 +49,18 @@ def bench_table1(csv: Csv):
 def bench_fig2(csv: Csv):
     """Fig 2: GPU-N bottleneck attribution."""
     def run():
+        groups = {
+            "train": suite_scenarios("train_lb") + suite_scenarios("train_sb"),
+            "infer_lb": suite_scenarios("infer_lb"),
+            "infer_sb": suite_scenarios("infer_sb"),
+        }
+        names = [n for g in groups.values() for n in g]
+        grid = SweepEngine(names, configs=[copa.GPU_N_BASE]).run()
         out = {}
-        for label, models in (("train", train_models("large") + train_models("small")),
-                              ("infer_lb", infer_models("large")),
-                              ("infer_sb", infer_models("small"))):
+        for label, scen in groups.items():
             segs = {"DRAM BW": [], "SM util": [], "Memory others": [], "Math": []}
-            for _, pm in models:
-                r = pm.run(hw.GPU_N)
+            for n in scen:
+                r = grid.result(scenario(n).name, "GPU-N")
                 for k in segs:
                     segs[k].append(r.segments[k] / r.time_s)
             out[label] = {k: float(np.mean(v)) for k, v in segs.items()}
@@ -58,13 +75,15 @@ def bench_fig2(csv: Csv):
 def bench_fig3(csv: Csv):
     """Fig 3: HPC DRAM-bandwidth insensitivity (130 workloads)."""
     def run():
-        pms = [perfmodel.PerfModel(t) for t in hpc_suite()]
-        base = [pm.time(hw.GPU_N) for pm in pms]
-        out = {}
-        for scale, label in ((1e6, "inf"), (1.5, "1.5x"), (0.75, "0.75x"), (0.5, "0.5x")):
-            spec = hw.GPU_N.with_(dram_bandwidth=hw.GPU_N.dram_bandwidth * scale)
-            out[label] = geomean(b / pm.time(spec) for b, pm in zip(base, pms))
-        return out
+        configs = [
+            hw.GPU_N.with_(name=f"GPU-N@{label}",
+                           dram_bandwidth=hw.GPU_N.dram_bandwidth * scale)
+            for scale, label in ((1e6, "inf"), (1.5, "1.5x"),
+                                 (0.75, "0.75x"), (0.5, "0.5x"))
+        ]
+        grid = SweepEngine(registry_suite("hpc"), configs=configs).run()
+        return {c.name.split("@")[1]: grid.geomean_speedup(c.name)
+                for c in configs}
 
     out, us = timed(run)
     csv.add("fig3.hpc.speedup_infBW", us, f"{out['inf']:.3f} (paper 1.05)")
@@ -78,18 +97,20 @@ CAPS_MB = (60, 120, 240, 480, 960, 1920, 3840)
 def bench_fig4(csv: Csv):
     """Fig 4: DRAM traffic reduction vs LLC capacity."""
     def run():
+        labels = ("train_lb", "infer_lb", "infer_sb")
+        names = [n for lb in labels for n in suite_scenarios(lb)]
+        caps = [c * MB for c in CAPS_MB]
+        grid = SweepEngine(names, configs=[], extra_llc_capacities=caps).run()
         out = {}
-        for label, traces in (("train_lb", mlperf.training_suite("large")),
-                              ("infer_lb", mlperf.inference_suite("large")),
-                              ("infer_sb", mlperf.inference_suite("small"))):
+        for lb in labels:
             reds = []
-            for t in traces:
-                sweep = dram_traffic_sweep(t, [c * MB for c in CAPS_MB])
-                base = sweep[60 * MB]
-                reds.append([min(base / max(sweep[c * MB], 1e-9), 1e3)
+            for t in suite_trace_names(lb):
+                sweep = grid.llc_traffic[t]
+                base = sweep[float(60 * MB)]
+                reds.append([min(base / max(sweep[float(c * MB)], 1e-9), 1e3)
                              for c in CAPS_MB])
             arr = np.array(reds)
-            out[label] = {"geo": np.exp(np.log(arr).mean(0)), "max": arr.max(0)}
+            out[lb] = {"geo": np.exp(np.log(arr).mean(0)), "max": arr.max(0)}
         return out
 
     out, us = timed(run)
@@ -107,13 +128,19 @@ def bench_fig4(csv: Csv):
 def bench_fig8(csv: Csv):
     """Fig 8: DL perf vs DRAM bandwidth on the L3-less COPA-GPU."""
     def run():
+        scales = (0.5, 1.5, 3.0, 1e6)
+        configs = [hw.GPU_N.with_(name=f"GPU-N@{s}xBW",
+                                  dram_bandwidth=hw.GPU_N.dram_bandwidth * s)
+                   for s in scales]
+        labels = ("train_lb", "infer_lb")
+        names = [n for lb in labels for n in suite_scenarios(lb)]
+        grid = SweepEngine(names, configs=configs).run()
         out = {}
-        for scale in (0.5, 1.5, 3.0, 1e6):
-            spec = hw.GPU_N.with_(dram_bandwidth=hw.GPU_N.dram_bandwidth * scale)
-            for label, models in (("train_lb", train_models("large")),
-                                  ("infer_lb", infer_models("large"))):
-                sp = [pm.time(hw.GPU_N) / pm.time(spec) for _, pm in models]
-                out[(label, scale)] = (geomean(sp), max(sp))
+        for lb in labels:
+            traces = suite_trace_names(lb)
+            for s, cfg in zip(scales, configs):
+                sp = grid.speedups(cfg.name, traces)
+                out[(lb, s)] = (geomean(sp), max(sp))
         return out
 
     out, us = timed(run)
@@ -128,18 +155,19 @@ def bench_fig8(csv: Csv):
 def bench_fig9(csv: Csv):
     """Fig 9: DL perf vs LLC capacity (L2 sweep, no L3)."""
     def run():
+        cap_configs = [hw.GPU_N.with_(name=f"GPU-N@{c}MB_L2",
+                                      l2_capacity=c * MB)
+                       for c in (60, 480, 960, 3840)]
+        labels = ("train_lb", "train_sb", "infer_lb")
+        names = [n for lb in labels for n in suite_scenarios(lb)]
+        grid = SweepEngine(names, configs=cap_configs + [copa.PERFECT_L2]).run()
         out = {}
-        for cap_mb in (60, 480, 960, 3840):
-            spec = hw.GPU_N.with_(l2_capacity=cap_mb * MB)
-            for label, models in (("train_lb", train_models("large")),
-                                  ("train_sb", train_models("small")),
-                                  ("infer_lb", infer_models("large"))):
-                out[(label, cap_mb)] = geomean(
-                    pm.time(hw.GPU_N) / pm.time(spec) for _, pm in models)
-        perfect = copa.PERFECT_L2.build()
-        for label, models in (("train_lb", train_models("large")),):
-            out[(label, "perfect")] = geomean(
-                pm.time(hw.GPU_N) / pm.time(perfect) for _, pm in models)
+        for lb in labels:
+            traces = suite_trace_names(lb)
+            for c, cfg in zip((60, 480, 960, 3840), cap_configs):
+                out[(lb, c)] = grid.geomean_speedup(cfg.name, traces)
+        out[("train_lb", "perfect")] = grid.geomean_speedup(
+            "PerfectL2", suite_trace_names("train_lb"))
         return out
 
     out, us = timed(run)
@@ -155,14 +183,16 @@ def bench_fig10(csv: Csv):
     """Fig 10: UHB link bandwidth sensitivity for HBM+L3."""
     def run():
         base = copa.HBM_L3.build()
-        out = {}
-        for scale, label in ((0.5, "0.5xRD+WR"), (1.0, "1x"), (2.0, "2x"),
-                             (4.0, "4x"), (1e6, "inf")):
-            spec = base.with_(l3_bandwidth=hw.GPU_N.dram_bandwidth * scale)
-            models = train_models("large") + infer_models("large")
-            out[label] = geomean(pm.time(hw.GPU_N) / pm.time(spec)
-                                 for _, pm in models)
-        return out
+        configs = [
+            base.with_(name=f"HBM+L3@{label}",
+                       l3_bandwidth=hw.GPU_N.dram_bandwidth * scale)
+            for scale, label in ((0.5, "0.5xRD+WR"), (1.0, "1x"), (2.0, "2x"),
+                                 (4.0, "4x"), (1e6, "inf"))
+        ]
+        names = suite_scenarios("train_lb") + suite_scenarios("infer_lb")
+        grid = SweepEngine(names, configs=configs).run()
+        return {c.name.split("@")[1]: grid.geomean_speedup(c.name)
+                for c in configs}
 
     out, us = timed(run)
     csv.add("fig10.uhb_2x_vs_inf", us,
@@ -171,25 +201,23 @@ def bench_fig10(csv: Csv):
 
 
 def bench_fig11(csv: Csv):
-    """Fig 11 / Table V: the COPA design space."""
+    """Fig 11 / Table V: the COPA design space, one engine grid."""
     paper = {
         ("HBM+L3", "train_lb"): 1.21, ("HBM+L3", "train_sb"): 1.18,
         ("HBML+L3", "train_lb"): 1.31, ("HBML+L3", "train_sb"): 1.27,
         ("HBML+L3", "infer_lb"): 1.35, ("HBML+L3", "infer_sb"): 1.08,
         ("HBM+L3L", "infer_lb"): 1.40,
     }
+    labels = ("train_lb", "train_sb", "infer_lb", "infer_sb")
 
     def run():
-        out = {}
-        for cfg in copa.TABLE_V:
-            spec = cfg.build()
-            for label, models in (("train_lb", train_models("large")),
-                                  ("train_sb", train_models("small")),
-                                  ("infer_lb", infer_models("large")),
-                                  ("infer_sb", infer_models("small"))):
-                out[(cfg.name, label)] = geomean(
-                    pm.time(hw.GPU_N) / pm.time(spec) for _, pm in models)
-        return out
+        names = [n for lb in labels for n in suite_scenarios(lb)]
+        grid = SweepEngine(names, configs=copa.TABLE_V).run()
+        return {
+            (cfg.name, lb): grid.geomean_speedup(cfg.name, suite_trace_names(lb))
+            for cfg in copa.TABLE_V
+            for lb in labels
+        }
 
     out, us = timed(run)
     for (name, label), v in sorted(out.items()):
@@ -199,7 +227,11 @@ def bench_fig11(csv: Csv):
 
 
 def bench_fig12(csv: Csv):
-    """Fig 12: HBML+L3 vs 2x/4x GPU-N scale-out at fixed global batch."""
+    """Fig 12: HBML+L3 vs 2x/4x GPU-N scale-out at fixed global batch.
+
+    The batch-override traces are unique to this figure, so it drives the
+    single-trace facade (PerfModel) — same engine machinery underneath.
+    """
     def run():
         copa_spec = copa.HBML_L3.build()
         out = {}
@@ -232,12 +264,12 @@ def bench_fig12(csv: Csv):
 def bench_energy(csv: Csv):
     """§III-D: HBM-related energy reduction with a 960MB L3."""
     def run():
-        spec = copa.HBM_L3.build()
-        models = train_models("large") + infer_models("large")
+        names = suite_scenarios("train_lb") + suite_scenarios("infer_lb")
+        grid = SweepEngine(names, configs=[copa.GPU_N_BASE, copa.HBM_L3]).run()
         ratios = []
-        for _, pm in models:
-            e_base = pm.energy(hw.GPU_N).total_joules
-            e_l3 = pm.energy(spec).total_joules
+        for t in grid.traces:
+            e_base = grid.result(t, "GPU-N").total_joules
+            e_l3 = grid.result(t, "HBM+L3").total_joules
             ratios.append(e_base / max(e_l3, 1e-12))
         return geomean(ratios), max(ratios)
 

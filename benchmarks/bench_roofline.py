@@ -63,21 +63,24 @@ def bench_roofline(csv: Csv):
 
 
 def bench_arch_copa(csv: Csv):
-    """The paper's analysis applied to the assigned architectures."""
-    from repro.core import msm
-    from repro.workloads.lm import arch_trace
+    """The paper's analysis applied to the assigned architectures — one
+    engine grid over the lm registry scenarios."""
+    from repro.core import copa
+    from repro.core.sweep import SweepEngine
 
     def run():
+        names = [f"lm.{arch}.{shape}" for arch in configs.ARCHS
+                 for shape in ("train_4k", "decode_32k")]
+        grid = SweepEngine(
+            names, configs=[copa.GPU_N_BASE],
+            extra_llc_capacities=[60 * MB, 960 * MB],
+        ).run()
         rows = []
-        for arch in configs.ARCHS:
-            for shape in ("train_4k", "decode_32k"):
-                t = arch_trace(arch, shape)
-                pm = perfmodel.PerfModel(t)
-                r = pm.run(hw.GPU_N)
-                an = msm.analyze(t)
-                red = an.baseline_traffic / max(an.sweep[960 * MB + 0], 1e-9)
-                rows.append((f"{arch}.{shape}", r.time_s, r.bottleneck,
-                             min(red, 1e3)))
+        for t in grid.traces:
+            r = grid.result(t, "GPU-N")
+            sweep = grid.llc_traffic[t]
+            red = sweep[float(60 * MB)] / max(sweep[float(960 * MB)], 1e-9)
+            rows.append((t, r.time_s, r.bottleneck, min(red, 1e3)))
         return rows
 
     rows, us = timed(run)

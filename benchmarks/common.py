@@ -1,34 +1,38 @@
-"""Shared benchmark helpers: suite iteration, CSV emission, model caching."""
+"""Shared benchmark helpers: suite naming, CSV emission, engine plumbing.
+
+All figure benchmarks drive the batched sweep engine
+(:class:`repro.core.sweep.SweepEngine`); the helpers here translate between
+the paper's figure labels (``train_lb``, ``infer_sb``, ...) and registry
+suites, and keep the per-process analysis cache warm across figures.
+"""
 from __future__ import annotations
 
 import time
-from functools import lru_cache
 
-import numpy as np
+from repro.core.sweep import geomean as _geomean
+from repro.workloads import registry
 
-from repro.core import hw, perfmodel
-from repro.workloads import mlperf
-
-
-@lru_cache(maxsize=256)
-def model_for(suite: str, name: str, setting: str) -> perfmodel.PerfModel:
-    if suite == "train":
-        return perfmodel.PerfModel(mlperf.training_trace(name, setting))
-    if suite == "infer":
-        return perfmodel.PerfModel(mlperf.inference_trace(name, setting))
-    raise KeyError(suite)
+# Paper figure labels -> registry suites.
+SUITE_LABELS = {
+    "train_lb": "mlperf.train.large",
+    "train_sb": "mlperf.train.small",
+    "infer_lb": "mlperf.infer.large",
+    "infer_sb": "mlperf.infer.small",
+}
 
 
-def train_models(setting: str):
-    return [(n, model_for("train", n, setting)) for n in mlperf.TRAIN_BATCHES]
+def suite_scenarios(label: str) -> list[str]:
+    """Registry scenario names for a figure label."""
+    return registry.suite(SUITE_LABELS[label])
 
 
-def infer_models(setting: str):
-    return [(n, model_for("infer", n, setting)) for n in mlperf.INFER_BATCHES]
+def suite_trace_names(label: str) -> list[str]:
+    """Trace names (SweepGrid row keys) for a figure label."""
+    return [registry.scenario(n).name for n in suite_scenarios(label)]
 
 
 def geomean(xs):
-    return perfmodel.geomean(xs)
+    return _geomean(xs)
 
 
 class Csv:
@@ -41,6 +45,17 @@ class Csv:
     def emit(self):
         for name, us, derived in self.rows:
             print(f"{name},{us:.1f},{derived}")
+
+    def as_json_dict(self) -> dict[str, float]:
+        """Perf-trajectory snapshot: timed rows only — crashed benches
+        (``*.ERROR``) and derived/sentinel rows (us == 0) would record a
+        regression as a fake 0.0us data point."""
+        return {name: round(us, 1) for name, us, _ in self.rows
+                if us > 0 and not name.endswith(".ERROR")}
+
+    @property
+    def errors(self) -> list[str]:
+        return [name for name, _, _ in self.rows if name.endswith(".ERROR")]
 
 
 def timed(fn):

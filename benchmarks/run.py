@@ -1,12 +1,15 @@
 """Benchmark harness: one function per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only fig11]
+    PYTHONPATH=src python -m benchmarks.run [--only fig11] [--json BENCH_core.json]
 
-Prints ``name,us_per_call,derived`` CSV rows.
+Prints ``name,us_per_call,derived`` CSV rows; ``--json OUT`` additionally
+writes a ``{name: us_per_call}`` JSON snapshot (the perf-trajectory file —
+CI and local runs write ``BENCH_core.json`` at the repo root).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 
 from benchmarks.common import Csv
@@ -15,11 +18,13 @@ from benchmarks.common import Csv
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", default=None, metavar="OUT",
+                    help="also write {name: us_per_call} JSON to OUT")
     args = ap.parse_args()
 
-    from benchmarks import bench_paper_figs, bench_roofline
+    from benchmarks import bench_core, bench_paper_figs, bench_roofline
 
-    benches = bench_paper_figs.ALL + bench_roofline.ALL
+    benches = bench_core.ALL + bench_paper_figs.ALL + bench_roofline.ALL
     csv = Csv()
     print("name,us_per_call,derived")
     for fn in benches:
@@ -30,6 +35,14 @@ def main() -> None:
         except Exception as e:  # noqa: BLE001 — report, keep benching
             csv.add(f"{fn.__name__}.ERROR", 0.0, f"{type(e).__name__}: {e}")
     csv.emit()
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(csv.as_json_dict(), f, indent=2, sort_keys=True)
+            f.write("\n")
+    if csv.errors:
+        print(f"{len(csv.errors)} benchmark(s) errored: {', '.join(csv.errors)}",
+              file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == '__main__':

@@ -1,7 +1,7 @@
-"""The paper's design-space exploration through the public API: sweep the
-COPA configurations (Table V) over the MLPerf-proxy suite AND the assigned
-LM architectures, and print the Fig-11-style table plus the software-MSM
-recommendation per LM cell.
+"""The paper's design-space exploration through the public API: one
+SweepEngine grid over the COPA configurations (Table V) x the MLPerf-proxy
+suites AND the assigned LM architectures, printing the Fig-11-style table
+plus the software-MSM recommendation per LM cell.
 
     PYTHONPATH=src python examples/copa_design_sweep.py
 """
@@ -10,31 +10,26 @@ import sys
 sys.path.insert(0, "src")
 
 import repro.configs as configs
-from repro.core import copa, hw, msm, perfmodel
+from repro.core import copa, msm
 from repro.core.hw import MB
-from repro.workloads import mlperf
-from repro.workloads.lm import arch_trace
+from repro.core.sweep import SweepEngine
+from repro.workloads import registry
+
+SUITES = ("mlperf.train.large", "mlperf.train.small",
+          "mlperf.infer.large", "mlperf.infer.small")
 
 
 def paper_suite_table():
     print("=== COPA design space (Table V / Fig 11) — MLPerf proxies ===")
-    pms = {}
-
-    def pm(t):
-        return pms.setdefault(t.name, perfmodel.PerfModel(t))
-
+    names = [n for s in SUITES for n in registry.suite(s)]
+    grid = SweepEngine(names, configs=copa.TABLE_V).run()
     header = f"{'config':12s} {'train-lb':>9s} {'train-sb':>9s} {'infer-lb':>9s} {'infer-sb':>9s}"
     print(header)
     for cfg in copa.TABLE_V:
-        spec = cfg.build()
         cells = []
-        for suite in (mlperf.training_suite("large"),
-                      mlperf.training_suite("small"),
-                      mlperf.inference_suite("large"),
-                      mlperf.inference_suite("small")):
-            sp = perfmodel.geomean(
-                pm(t).time(hw.GPU_N) / pm(t).time(spec) for t in suite)
-            cells.append(f"{sp:9.3f}")
+        for s in SUITES:
+            traces = [registry.scenario(n).name for n in registry.suite(s)]
+            cells.append(f"{grid.geomean_speedup(cfg.name, traces):9.3f}")
         print(f"{cfg.name:12s} " + " ".join(cells))
 
 
@@ -42,7 +37,7 @@ def arch_msm_table():
     print("\n=== Assigned architectures: COPA analysis + software-MSM ===")
     for arch in configs.ARCHS:
         for shape in ("train_4k", "decode_32k"):
-            t = arch_trace(arch, shape)
+            t = registry.scenario(f"lm.{arch}.{shape}")
             an = msm.analyze(t)
             red = min(an.baseline_traffic / max(an.sweep[960 * MB], 1e-9), 999)
             policy = msm.recommend(shape, configs.get(arch).n_params())

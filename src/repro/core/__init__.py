@@ -6,12 +6,24 @@ Public API:
     trace      — tensor-access trace IR
     stackdist  — LRU stack distances (Mattson)
     cachesim   — L2 -> L3 -> DRAM hierarchy traffic model
-    perfmodel  — bottleneck time model + Fig-2 attribution
+    sweep      — batched design-space sweep engine (TraceAnalysis/SweepEngine)
+    perfmodel  — bottleneck time model + Fig-2 attribution (facade over sweep)
     roofline   — 3-term TPU roofline from dry-run artifacts
     hloparse   — collective-bytes extraction from HLO
     msm        — software memory-system-module policies (TPU adaptation)
 """
-from repro.core import cachesim, copa, hloparse, hw, msm, perfmodel, roofline, stackdist, trace
+from repro.core import (
+    cachesim,
+    copa,
+    hloparse,
+    hw,
+    msm,
+    perfmodel,
+    roofline,
+    stackdist,
+    sweep,
+    trace,
+)
 
 __all__ = [
     "cachesim",
@@ -22,5 +34,6 @@ __all__ = [
     "perfmodel",
     "roofline",
     "stackdist",
+    "sweep",
     "trace",
 ]

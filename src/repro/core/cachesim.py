@@ -25,7 +25,6 @@ trace and read statistics off the second copy (``cyclic=True``).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import lru_cache
 
 import numpy as np
 
@@ -106,12 +105,15 @@ def _assign_buffers(trace: Trace) -> dict[str, str]:
     return mapping
 
 
-def build_stream(trace: Trace, cyclic: bool = True, reuse_buffers: bool = True) -> TouchStream:
+def build_stream(trace: Trace, cyclic: bool = True, reuse_buffers: bool = True,
+                 dist_fn=_mattson_pass) -> TouchStream:
     """Tensors whose name starts with ``in.`` are *streaming*: fresh data
     arrives every iteration (input batches, labels), so consecutive
     iterations never reuse them — they get one tensor identity per iteration
     copy instead of wrapping around. Transient tensors share recycled buffer
-    identities (see :func:`_assign_buffers`)."""
+    identities (see :func:`_assign_buffers`). ``dist_fn`` selects the Mattson
+    implementation (the per-touch reference is used by parity/benchmark
+    paths)."""
     mapping = _assign_buffers(trace) if reuse_buffers else {}
     op_idx, tids, sizes, is_write = [], [], [], []
     intern: dict[str, int] = {}
@@ -144,7 +146,7 @@ def build_stream(trace: Trace, cyclic: bool = True, reuse_buffers: bool = True) 
         _, dense = np.unique(tids, return_inverse=True)
     else:
         dense = tids
-    dist = _mattson_pass(dense, sizes) if n else np.zeros(0)
+    dist = dist_fn(dense, sizes) if n else np.zeros(0)
     return TouchStream(
         n_ops=len(trace.ops),
         op_idx=op_idx,
@@ -177,12 +179,12 @@ class LevelTraffic:
         return float(self.writeback.sum())
 
 
-def traffic_below(stream: TouchStream, capacities: list[float]) -> list[LevelTraffic]:
-    """Traffic leaving an LRU pool of each capacity, one trace pass total.
-
-    Reads are vectorized over capacities; the dirty-fraction recurrence is a
-    single sequential pass carrying a (n_tensors x n_caps) state.
-    """
+def _reference_traffic_below(
+    stream: TouchStream, capacities: list[float]
+) -> list[LevelTraffic]:
+    """Per-touch oracle for :func:`traffic_below` (sequential dirty-state
+    recurrence carrying a (n_tensors x n_caps) state). Retained for parity
+    tests and the before/after timing in ``benchmarks/bench_core.py``."""
     caps = np.asarray(capacities, dtype=np.float64)
     ncap = len(caps)
     fills = np.zeros((ncap, stream.n_ops))
@@ -220,6 +222,86 @@ def traffic_below(stream: TouchStream, capacities: list[float]) -> list[LevelTra
     return [LevelTraffic(fills[i], wbs[i]) for i in range(ncap)]
 
 
+def traffic_below(stream: TouchStream, capacities: list[float]) -> list[LevelTraffic]:
+    """Traffic leaving an LRU pool of each capacity, one trace pass total.
+
+    Fully vectorized over (touches x capacities). The dirty fraction seen by
+    a touch is a product of residency fractions along its tensor's chain of
+    reads since the last write (writes reset it to 1, chain starts to 0), so
+    grouping touches by tensor turns the sequential recurrence into a
+    segmented cumulative-product scan: a log-space cumsum with per-segment
+    base subtraction, plus an explicit zero counter so exact-zero fractions
+    stay exact. Each capacity column is independent, so batching capacities
+    is bit-identical to evaluating them one at a time — the property the
+    sweep engine relies on to share one pass across a whole design space.
+    """
+    caps = np.asarray(capacities, dtype=np.float64)
+    ncap = len(caps)
+    n_ops = stream.n_ops
+    n = len(stream.op_idx)
+    if n == 0 or ncap == 0:
+        return [LevelTraffic(np.zeros(n_ops), np.zeros(n_ops))
+                for _ in range(ncap)]
+
+    # Group touches by tensor, preserving time order inside each chain.
+    order = np.argsort(stream.tensor_idx, kind="stable")
+    sizes = stream.sizes[order]
+    dist = stream.dist[order]
+    is_write = stream.is_write[order]
+    tid = stream.tensor_idx[order]
+    op_idx = stream.op_idx[order]
+    record = order >= stream.second_half
+
+    # Residency per (touch, capacity); +inf distance -> nothing resident.
+    with np.errstate(invalid="ignore"):  # inf cap - inf dist
+        resident = np.clip(caps[None, :] - dist[:, None], 0.0, sizes[:, None])
+    resident[np.isinf(dist)] = 0.0
+    evicted = sizes[:, None] - resident
+    frac = np.divide(
+        resident, sizes[:, None], out=np.zeros_like(resident),
+        where=sizes[:, None] > 0,
+    )
+
+    pos = np.arange(n)
+    chain_start = np.maximum.accumulate(
+        np.where(np.concatenate([[True], tid[1:] != tid[:-1]]), pos, 0)
+    )
+    # Last write strictly before each touch (global running max; valid only
+    # when it falls inside the touch's own chain).
+    last_write_incl = np.maximum.accumulate(np.where(is_write, pos, -1))
+    last_write = np.concatenate([[-1], last_write_incl[:-1]])
+    has_base = last_write >= chain_start
+
+    # Segmented product of read fractions over (last_write, touch), in log
+    # space; zero fractions tracked separately so they yield exactly 0.
+    is_read_col = ~is_write[:, None]
+    log_safe = np.log(np.where(is_read_col & (frac > 0), frac, 1.0))
+    zero_read = is_read_col & (frac <= 0.0)
+    log_cum = np.concatenate([np.zeros((1, ncap)), np.cumsum(log_safe, axis=0)])
+    zero_cum = np.concatenate(
+        [np.zeros((1, ncap), dtype=np.int64), np.cumsum(zero_read, axis=0)]
+    )
+    seg_lo = last_write + 1  # first read after the resetting write
+    dirty = np.exp(log_cum[pos] - log_cum[seg_lo])
+    dirty[(zero_cum[pos] - zero_cum[seg_lo]) > 0] = 0.0
+    dirty[~has_base] = 0.0
+
+    # Scatter recorded traffic back to (capacity, op): flat index c*n_ops+op,
+    # one weighted bincount for writebacks and one for fills.
+    cap_offsets = np.arange(ncap, dtype=np.int64)[None, :] * n_ops
+    rec = np.nonzero(record)[0]
+    flat = (op_idx[rec, None].astype(np.int64) + cap_offsets).ravel()
+    wbs = np.bincount(
+        flat, weights=(evicted[rec] * dirty[rec]).ravel(), minlength=ncap * n_ops
+    ).reshape(ncap, n_ops)
+    rd = np.nonzero(record & ~is_write)[0]
+    flat_rd = (op_idx[rd, None].astype(np.int64) + cap_offsets).ravel()
+    fills = np.bincount(
+        flat_rd, weights=evicted[rd].ravel(), minlength=ncap * n_ops
+    ).reshape(ncap, n_ops)
+    return [LevelTraffic(fills[i], wbs[i]) for i in range(ncap)]
+
+
 @dataclass
 class HierarchyTraffic:
     """Traffic at each boundary of the §III-C memory system, per op."""
@@ -238,25 +320,23 @@ class HierarchyTraffic:
 def simulate_hierarchy(
     trace: Trace, spec: GpuSpec, cyclic: bool = True, stream: TouchStream | None = None
 ) -> HierarchyTraffic:
-    stream = stream if stream is not None else build_stream(trace, cyclic=cyclic)
-    l2_touch = np.zeros(stream.n_ops)
-    half = stream.second_half
-    np.add.at(l2_touch, stream.op_idx[half:], stream.sizes[half:])
+    """One-shot §III-C hierarchy simulation. Thin wrapper over the single
+    implementation in :class:`~repro.core.sweep.TraceAnalysis` (which adds
+    capacity caching for sweeps)."""
+    from repro.core.sweep import TraceAnalysis  # lazy: sweep imports cachesim
 
-    if spec.l3_capacity:
-        post_l2, dram = traffic_below(
-            stream, [spec.l2_capacity, spec.l2_capacity + spec.l3_capacity]
-        )
-        return HierarchyTraffic(l2_touch, post_l2, dram, has_l3=True)
-    (post_l2,) = traffic_below(stream, [spec.l2_capacity])
-    return HierarchyTraffic(l2_touch, post_l2, post_l2, has_l3=False)
+    return TraceAnalysis(trace, cyclic=cyclic, stream=stream).hierarchy(spec)
 
 
 def dram_traffic_sweep(
     trace: Trace, llc_capacities: list[float], cyclic: bool = True
 ) -> dict[float, float]:
     """Total DRAM traffic vs LLC capacity (paper Fig 4). The LLC here is the
-    union pool DRAM sees (L2, or L2+L3 when composed)."""
-    stream = build_stream(trace, cyclic=cyclic)
-    results = traffic_below(stream, list(llc_capacities))
-    return {c: r.total for c, r in zip(llc_capacities, results)}
+    union pool DRAM sees (L2, or L2+L3 when composed).
+
+    Thin wrapper over the shared :class:`~repro.core.sweep.TraceAnalysis`
+    cache, so repeated sweeps of one trace (across figures, configs, tests)
+    reuse the stream and every previously computed capacity."""
+    from repro.core.sweep import analysis_for  # lazy: sweep imports cachesim
+
+    return analysis_for(trace, cyclic=cyclic).dram_traffic(list(llc_capacities))

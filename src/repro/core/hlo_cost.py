@@ -66,7 +66,9 @@ class HloCost:
     collective_by_kind: dict
 
 
-def _parse_computations(text: str) -> tuple[dict[str, "_Comp"], str]:
+def _parse_computations(
+    text: str, lhs_shapes: dict[str, tuple[int, ...]]
+) -> tuple[dict[str, "_Comp"], str]:
     comps: dict[str, _Comp] = {}
     cur: _Comp | None = None
     entry = None
@@ -95,7 +97,7 @@ def _parse_computations(text: str) -> tuple[dict[str, "_Comp"], str]:
 
         # --- dot flops (counted even inside fusion bodies) ---
         if opcode == "dot":
-            flops = _dot_flops(rhs, shapes)
+            flops = _dot_flops(rhs, lhs_shapes)
             cur.dot_flops += flops
 
         # --- call edges ---
@@ -139,7 +141,7 @@ def _parse_computations(text: str) -> tuple[dict[str, "_Comp"], str]:
     return comps, entry
 
 
-def _dot_flops(rhs: str, shapes: dict[str, int]) -> float:
+def _dot_flops(rhs: str, lhs_shapes: dict[str, tuple[int, ...]]) -> float:
     """2 * prod(result dims) * prod(contracted dims of lhs)."""
     out_m = _SHAPE_RE.search(rhs.split("dot(")[0])
     if not out_m:
@@ -153,7 +155,7 @@ def _dot_flops(rhs: str, shapes: dict[str, int]) -> float:
     if not cm or not ops:
         return 2.0 * out_elems  # fallback: at least count outputs
     # need lhs dims: find its definition shape string
-    lhs_shape = _LHS_SHAPES.get(ops[0])
+    lhs_shape = lhs_shapes.get(ops[0])
     if lhs_shape is None:
         return 2.0 * out_elems
     contracted = 1
@@ -163,12 +165,11 @@ def _dot_flops(rhs: str, shapes: dict[str, int]) -> float:
     return 2.0 * out_elems * contracted
 
 
-_LHS_SHAPES: dict[str, tuple[int, ...]] = {}
-
-
 def analyze_hlo_cost(text: str) -> HloCost:
-    # pre-pass: record every instruction's dims for dot contraction lookup
-    _LHS_SHAPES.clear()
+    # pre-pass: record every instruction's dims for dot contraction lookup.
+    # Local to this call — a module-global here would leak shapes across
+    # analyses of different programs (reentrancy bug).
+    lhs_shapes: dict[str, tuple[int, ...]] = {}
     for line in text.splitlines():
         st = line.strip()
         if not st.startswith("%") or "=" not in st:
@@ -177,9 +178,9 @@ def analyze_hlo_cost(text: str) -> HloCost:
         m = _SHAPE_RE.search(rhs.split("(")[0])
         if m:
             dims = tuple(int(d) for d in m.group(2).split(",") if d) or ()
-            _LHS_SHAPES[lhs.strip().lstrip("%")] = dims
+            lhs_shapes[lhs.strip().lstrip("%")] = dims
 
-    comps, entry = _parse_computations(text)
+    comps, entry = _parse_computations(text, lhs_shapes)
     if entry is None:
         return HloCost(0.0, 0.0, 0.0, {})
 

@@ -16,8 +16,8 @@ from __future__ import annotations
 
 from dataclasses import dataclass, replace
 
-from repro.core.cachesim import dram_traffic_sweep
 from repro.core.hw import MB, TPU_V5E
+from repro.core.sweep import analysis_for
 from repro.core.trace import Trace
 
 
@@ -144,7 +144,7 @@ class TrafficAnalysis:
 
 def analyze(trace: Trace, capacities_mb: tuple[int, ...] = (60, 120, 240, 480, 960, 1920, 3840)) -> TrafficAnalysis:
     caps = [c * MB for c in capacities_mb]
-    sweep = dram_traffic_sweep(trace, caps)
+    sweep = analysis_for(trace).dram_traffic(caps)
     return TrafficAnalysis(
         trace_name=trace.name,
         baseline_traffic=sweep[caps[0]],

@@ -16,6 +16,11 @@ recovered by idealizing it, peeled in the paper's order:
     Memory others = T(DRAM -> inf) - T(DRAM, L2, UHB -> inf)
     SM util       = T(all mem -> inf) - T(all mem -> inf, occupancy -> 1)
     Math          = the remainder (pure math at full occupancy)
+
+The computation itself lives in :class:`repro.core.sweep.TraceAnalysis` —
+one shared, capacity-batched implementation for this class, ``msm.analyze``
+and the :class:`~repro.core.sweep.SweepEngine`. :class:`PerfModel` is the
+single-trace facade kept for its established API.
 """
 from __future__ import annotations
 
@@ -24,19 +29,15 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from repro.core import copa as copa_mod
-from repro.core.cachesim import (
-    HierarchyTraffic,
-    TouchStream,
-    build_stream,
-    simulate_hierarchy,
-)
+from repro.core.cachesim import HierarchyTraffic, TouchStream
 from repro.core.hw import GpuSpec
+from repro.core.sweep import (  # noqa: F401
+    LAUNCH_OVERHEAD_S,
+    TraceAnalysis,
+    bottleneck_of,
+    geomean,
+)
 from repro.core.trace import Trace
-
-LAUNCH_OVERHEAD_S = 2.0e-6  # per-kernel launch/dependency latency
-
-# Math throughput class per trace precision.
-_TENSOR_CORE = {"fp16", "bf16", "int8", "fp8"}
 
 
 @dataclass
@@ -52,31 +53,39 @@ class PerfResult:
 
     @property
     def bottleneck(self) -> str:
-        segs = {k: v for k, v in self.segments.items()}
-        segs.pop("Math", None)
-        return max(segs, key=segs.get) if segs else "Math"
+        return bottleneck_of(self.segments)
 
 
 class PerfModel:
-    """Caches the capacity-independent trace analysis across spec sweeps."""
+    """Single-trace facade over :class:`~repro.core.sweep.TraceAnalysis`.
 
-    def __init__(self, trace: Trace, cyclic: bool = True):
+    Capacity-batched traffic is cached inside the analysis, so sweeping many
+    specs over one trace shares a single trace pass per new capacity set.
+    """
+
+    def __init__(self, trace: Trace, cyclic: bool = True,
+                 analysis: TraceAnalysis | None = None):
         self.trace = trace
         self.cyclic = cyclic
-        self.stream: TouchStream = build_stream(trace, cyclic=cyclic)
-        self._traffic_cache: dict[tuple[int, int], HierarchyTraffic] = {}
-        # Static per-op vectors.
-        self.flops = np.array([op.flops for op in trace.ops])
-        self.parallelism = np.array([op.parallelism for op in trace.ops])
-        self.is_tc = np.array([op.precision in _TENSOR_CORE for op in trace.ops])
+        self.analysis = analysis if analysis is not None else TraceAnalysis(
+            trace, cyclic=cyclic
+        )
+        self.stream: TouchStream = self.analysis.stream
+
+    @property
+    def flops(self) -> np.ndarray:
+        return self.analysis.flops
+
+    @property
+    def parallelism(self) -> np.ndarray:
+        return self.analysis.parallelism
+
+    @property
+    def is_tc(self) -> np.ndarray:
+        return self.analysis.is_tc
 
     def traffic(self, spec: GpuSpec) -> HierarchyTraffic:
-        key = (int(spec.l2_capacity), int(spec.l3_capacity))
-        if key not in self._traffic_cache:
-            self._traffic_cache[key] = simulate_hierarchy(
-                self.trace, spec, cyclic=self.cyclic, stream=self.stream
-            )
-        return self._traffic_cache[key]
+        return self.analysis.hierarchy(spec)
 
     # -- core time estimate ----------------------------------------------------
     def time(
@@ -87,80 +96,32 @@ class PerfModel:
         ideal_occupancy: bool = False,
         per_op: bool = False,
     ):
-        tr = self.traffic(spec)
-        # Occupancy is sublinear in exposed parallelism: a kernel filling 10%
-        # of the machine still extracts >10% of peak thanks to ILP, split-K
-        # decompositions and cache effects (exponent calibrated against the
-        # paper's Fig-2 small-batch attribution).
-        occ = (
-            np.ones_like(self.parallelism)
-            if ideal_occupancy
-            else np.minimum(1.0, self.parallelism / spec.concurrency) ** 0.55
+        return self.analysis.time(
+            spec,
+            ideal_dram=ideal_dram,
+            ideal_mem_other=ideal_mem_other,
+            ideal_occupancy=ideal_occupancy,
+            per_op=per_op,
         )
-        f_tc = spec.fp16_tflops * 1e12
-        f_fp32 = spec.fp32_tflops * 1e12
-        fmath = np.where(self.is_tc, f_tc, f_fp32) * occ
-        t_math = np.divide(self.flops, fmath, out=np.zeros_like(self.flops), where=fmath > 0)
-
-        if ideal_mem_other:
-            t_l2 = np.zeros(len(self.flops))
-            t_uhb = np.zeros(len(self.flops))
-        else:
-            t_l2 = tr.l2_touch / (spec.l2_bandwidth * occ)
-            if tr.has_l3 and spec.l3_bandwidth > 0:
-                # UHB is per-direction (paper: 2xRD + 2xWR).
-                t_uhb = np.maximum(
-                    tr.post_l2.fill / spec.l3_bandwidth,
-                    tr.post_l2.writeback / spec.l3_bandwidth,
-                )
-            else:
-                t_uhb = np.zeros(len(self.flops))
-
-        if ideal_dram:
-            t_dram = np.zeros(len(self.flops))
-        else:
-            t_dram = (tr.dram.fill + tr.dram.writeback) / spec.dram_bandwidth
-
-        overhead = 0.0 if ideal_occupancy else LAUNCH_OVERHEAD_S
-        t_op = np.maximum.reduce([t_math, t_l2, t_uhb, t_dram]) + overhead
-        if per_op:
-            return t_op
-        return float(t_op.sum())
 
     # -- paper-style outputs ---------------------------------------------------
     def run(self, spec: GpuSpec) -> PerfResult:
-        t_act = self.time(spec)
-        t_no_dram = self.time(spec, ideal_dram=True)
-        t_no_mem = self.time(spec, ideal_dram=True, ideal_mem_other=True)
-        t_math = self.time(
-            spec, ideal_dram=True, ideal_mem_other=True, ideal_occupancy=True
-        )
-        tr = self.traffic(spec)
+        t_act, segments = self.analysis.attribution(spec)
+        tr = self.analysis.hierarchy(spec)
         return PerfResult(
             trace_name=self.trace.name,
             spec_name=spec.name,
             time_s=t_act,
-            per_op_s=self.time(spec, per_op=True),
-            segments={
-                "Math": t_math,
-                "SM util": max(t_no_mem - t_math, 0.0),
-                "Memory others": max(t_no_dram - t_no_mem, 0.0),
-                "DRAM BW": max(t_act - t_no_dram, 0.0),
-            },
+            per_op_s=self.analysis.time(spec, per_op=True),
+            segments=segments,
             dram_bytes=tr.dram.total,
             l3_bytes=tr.l3_bytes,
             uhb_bytes=tr.post_l2.total if tr.has_l3 else 0.0,
         )
 
     def energy(self, spec: GpuSpec) -> copa_mod.EnergyReport:
-        tr = self.traffic(spec)
-        return copa_mod.memory_energy(spec, tr.dram.total, tr.l3_bytes)
+        return self.analysis.energy(spec)
 
 
 def speedup(model: PerfModel, spec: GpuSpec, baseline: GpuSpec) -> float:
     return model.time(baseline) / model.time(spec)
-
-
-def geomean(xs) -> float:
-    xs = np.asarray(list(xs), dtype=np.float64)
-    return float(np.exp(np.log(xs).mean())) if len(xs) else float("nan")

@@ -1,12 +1,19 @@
 """LRU stack-distance machinery (Mattson et al. 1970).
 
-Two implementations:
+Three implementations:
 
-* :func:`reuse_distances` — tensor-granular, bytes-weighted Mattson using a
-  Fenwick tree: for every touch it returns the number of *unique other bytes*
-  touched since the previous touch of the same tensor. O(T log T) for a
-  trace of T touches. This feeds the fractional-residency cache model in
-  ``cachesim.py``.
+* :func:`_mattson_pass` — vectorized NumPy Mattson: for every touch it
+  returns the number of *unique other bytes* touched since the previous
+  touch of the same tensor. The per-touch distance decomposes into a prefix
+  sum minus a weighted dominance correction, computed with argsort/
+  searchsorted merge counting in O(T log^2 T) with no Python-level
+  per-touch loop. This feeds the fractional-residency cache model in
+  ``cachesim.py`` and the batched sweep engine in ``sweep.py``.
+
+* :func:`_reference_mattson_pass` — the original per-touch Fenwick-tree
+  pass, O(T log T) but Python-loop bound. Retained as the parity oracle for
+  the vectorized kernel (``tests/test_sweep.py``) and for the before/after
+  timing in ``benchmarks/bench_core.py``.
 
 * :class:`BlockLRU` — an exact block-granular LRU simulator (slow, small
   traces only). Used by the property tests to validate the fractional model.
@@ -47,9 +54,12 @@ class Fenwick:
         return self.prefix(hi) - (self.prefix(lo - 1) if lo > 0 else 0.0)
 
 
-def _mattson_pass(tensor_ids: np.ndarray, sizes: np.ndarray) -> np.ndarray:
+def _reference_mattson_pass(tensor_ids: np.ndarray, sizes: np.ndarray) -> np.ndarray:
     """dist[t] = unique other bytes touched strictly between the previous
-    touch of tensor_ids[t] and t; +inf for first touches."""
+    touch of tensor_ids[t] and t; +inf for first touches.
+
+    Per-touch Fenwick-tree oracle; see :func:`_mattson_pass` for the
+    vectorized production path."""
     n = len(tensor_ids)
     fen = Fenwick(n)
     pos: dict[int, int] = {}
@@ -63,6 +73,90 @@ def _mattson_pass(tensor_ids: np.ndarray, sizes: np.ndarray) -> np.ndarray:
             fen.add(p, -s)
         fen.add(t, s)
         pos[x] = t
+    return dist
+
+
+def _prev_occurrence(tensor_ids: np.ndarray) -> np.ndarray:
+    """prev[t] = index of the previous touch of tensor_ids[t]; -1 for firsts."""
+    n = len(tensor_ids)
+    order = np.argsort(tensor_ids, kind="stable")  # grouped, time-ordered
+    sorted_ids = tensor_ids[order]
+    prev_sorted = np.full(n, -1, dtype=np.int64)
+    if n > 1:
+        same = sorted_ids[1:] == sorted_ids[:-1]
+        prev_sorted[1:][same] = order[:-1][same]
+    prev = np.empty(n, dtype=np.int64)
+    prev[order] = prev_sorted
+    return prev
+
+
+def _weighted_larger_before(values: np.ndarray, weights: np.ndarray) -> np.ndarray:
+    """out[t] = sum of weights[r] over r < t with values[r] > values[t].
+
+    Weighted inversion counting via bottom-up merge: at each level, right
+    half-blocks query the sorted left half-blocks with one global
+    ``searchsorted`` (per-block composite keys keep the concatenation of
+    sorted blocks globally sorted). O(n log^2 n), all NumPy.
+    """
+    n = len(values)
+    out = np.zeros(n, dtype=np.float64)
+    if n < 2:
+        return out
+    values = np.asarray(values, dtype=np.int64)
+    base = int(values.max()) - int(values.min()) + 2
+    vals = (values - int(values.min())).astype(np.int64)  # >= 0, < base - 1
+    idx = np.arange(n, dtype=np.int64)
+    m = 1
+    while m < n:
+        pair = idx // (2 * m)
+        in_left = (idx // m) % 2 == 0
+        left = idx[in_left]
+        right = idx[~in_left]
+        if len(right):
+            # Sort left elements by (pair, value); composite keys make the
+            # flat array globally sorted so one searchsorted serves all pairs.
+            key_left = pair[left] * base + vals[left]
+            ord_l = np.argsort(key_left, kind="stable")
+            key_sorted = key_left[ord_l]
+            w_sorted = weights[left][ord_l]
+            cumw = np.concatenate([[0.0], np.cumsum(w_sorted)])
+            q_pair = pair[right]
+            # elements of my pair's left block with value <= mine:
+            lo = np.searchsorted(key_sorted, q_pair * base + vals[right], side="right")
+            # end of my pair's left block:
+            hi = np.searchsorted(key_sorted, (q_pair + 1) * base, side="left")
+            out[right] += cumw[hi] - cumw[lo]
+        m *= 2
+    return out
+
+
+def _mattson_pass(tensor_ids: np.ndarray, sizes: np.ndarray) -> np.ndarray:
+    """Vectorized Mattson pass, same contract as the reference.
+
+    Decomposition: with p = prev-touch of the tensor touched at t,
+
+        dist[t] = sum(sizes[p+1 : t])                          (all touches)
+                - sum(sizes[r] for p < r < t with prev[r] > p)  (re-touches)
+
+    i.e. every tensor in the window is counted once, at its *first* touch
+    inside the window — exactly what the Fenwick reference computes (its
+    tree holds each tensor's weight at its most recent touch position).
+    The correction term is a weighted dominance count: prev[r] > prev[t]
+    with r < t implies r > p automatically, so it reduces to weighted
+    inversion counting over the prev[] sequence.
+    """
+    tensor_ids = np.asarray(tensor_ids, dtype=np.int64)
+    sizes = np.asarray(sizes, dtype=np.float64)
+    n = len(tensor_ids)
+    dist = np.full(n, INF)
+    if n == 0:
+        return dist
+    prev = _prev_occurrence(tensor_ids)
+    has_prev = prev >= 0
+    prefix = np.concatenate([[0.0], np.cumsum(sizes)])  # prefix[k] = sum sizes[:k]
+    window = prefix[np.arange(n)] - prefix[np.clip(prev, 0, None) + 1]
+    corr = _weighted_larger_before(prev, sizes)
+    dist[has_prev] = window[has_prev] - corr[has_prev]
     return dist
 
 

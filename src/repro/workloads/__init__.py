@@ -1,6 +1,8 @@
 """Workload traces: MLPerf-proxy (paper Table III), HPC population (Fig 3),
 and LM-architecture traces derived from ``repro.configs`` (our 10 assigned
-architectures run through the same COPA analysis)."""
-from repro.workloads import common, hpc, lm, mlperf
+architectures run through the same COPA analysis). ``registry`` maps
+scenario names -> trace factories across all three families for the sweep
+engine."""
+from repro.workloads import common, hpc, lm, mlperf, registry
 
-__all__ = ["common", "hpc", "lm", "mlperf"]
+__all__ = ["common", "hpc", "lm", "mlperf", "registry"]

@@ -1,0 +1,114 @@
+"""Scenario registry: every known workload trace behind one namespace.
+
+Maps scenario names -> trace factories across the three workload families so
+the sweep engine (``repro.core.sweep.SweepEngine``) can enumerate the whole
+evaluation space by name:
+
+* ``mlperf.train.<bench>.<setting>`` / ``mlperf.infer.<bench>.<setting>`` —
+  the paper's Table-III MLPerf proxies at ``large``/``small`` batch;
+* ``lm.<arch>.<shape>`` — the assigned LM architectures x shapes
+  (``repro.configs``), e.g. ``lm.deepseek_v2_236b.decode_32k``;
+* ``hpc.<family>.<k>`` — the 130-app Fig-3 HPC proxy population.
+
+Suites group scenarios the way the paper's figures do (``mlperf.train.large``,
+``lm.decode_32k``, ``hpc``, ...). Factories are lazy and cached by the
+underlying modules, so enumerating names costs nothing until a trace is
+actually built.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+from repro.core.trace import Trace
+from repro.workloads import hpc as hpc_mod
+from repro.workloads import lm as lm_mod
+from repro.workloads import mlperf as mlperf_mod
+
+_FACTORIES: dict[str, Callable[[], Trace]] = {}
+_SUITES: dict[str, list[str]] = {}
+
+
+def register(name: str, factory: Callable[[], Trace],
+             suites: tuple[str, ...] = ()) -> None:
+    """Register one scenario; ``suites`` are group names it belongs to."""
+    if name in _FACTORIES:
+        raise ValueError(f"scenario {name!r} already registered")
+    _FACTORIES[name] = factory
+    for s in suites:
+        _SUITES.setdefault(s, []).append(name)
+
+
+def scenario(name: str) -> Trace:
+    """Build (or fetch the cached) trace for one scenario name."""
+    try:
+        factory = _FACTORIES[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown scenario {name!r}; see repro.workloads.registry.scenarios()"
+        ) from None
+    return factory()
+
+
+def scenarios(prefix: str = "") -> list[str]:
+    return [n for n in _FACTORIES if n.startswith(prefix)]
+
+
+def suites() -> list[str]:
+    return list(_SUITES)
+
+
+def suite(name: str) -> list[str]:
+    """Scenario names in a suite (KeyError on unknown suite)."""
+    return list(_SUITES[name])
+
+
+def suite_traces(name: str) -> list[Trace]:
+    return [scenario(n) for n in suite(name)]
+
+
+# --- built-in population ------------------------------------------------------
+
+def _register_mlperf() -> None:
+    for setting in ("large", "small"):
+        for bench in mlperf_mod.TRAIN_BATCHES:
+            register(
+                f"mlperf.train.{bench}.{setting}",
+                lambda b=bench, s=setting: mlperf_mod.training_trace(b, s),
+                suites=(f"mlperf.train.{setting}", "mlperf"),
+            )
+        for bench in mlperf_mod.INFER_BATCHES:
+            register(
+                f"mlperf.infer.{bench}.{setting}",
+                lambda b=bench, s=setting: mlperf_mod.inference_trace(b, s),
+                suites=(f"mlperf.infer.{setting}", "mlperf"),
+            )
+
+
+def _register_lm() -> None:
+    from repro.configs import ARCHS, SHAPES
+
+    for arch in ARCHS:
+        for shape in SHAPES:
+            register(
+                f"lm.{arch}.{shape}",
+                lambda a=arch, s=shape: lm_mod.arch_trace(a, s),
+                suites=(f"lm.{shape}", "lm"),
+            )
+
+
+def _register_hpc() -> None:
+    # One scenario per proxy app; the suite builds all 130 in one cached call.
+    idx = 0
+    for family, count in hpc_mod.APP_FAMILIES:
+        for k in range(count):
+            register(
+                f"hpc.{family}.{k}",
+                lambda i=idx: hpc_mod.hpc_suite()[i],
+                suites=("hpc",),
+            )
+            idx += 1
+
+
+_register_mlperf()
+_register_lm()
+_register_hpc()

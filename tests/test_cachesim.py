@@ -2,6 +2,8 @@
 monotonicity properties (hypothesis)."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.cachesim import build_stream, dram_traffic_sweep, traffic_below

@@ -1,0 +1,220 @@
+"""Sweep-engine tests: vectorized kernels vs per-touch references, the
+engine grid vs PerfModel/dram_traffic_sweep (bit-for-bit), the registry."""
+import numpy as np
+import pytest
+
+from repro.core import copa, hw, perfmodel
+from repro.core.cachesim import (
+    _reference_traffic_below,
+    build_stream,
+    dram_traffic_sweep,
+    traffic_below,
+)
+from repro.core.hw import MB
+from repro.core.stackdist import (
+    BlockLRU,
+    _mattson_pass,
+    _reference_mattson_pass,
+)
+from repro.core.sweep import SweepEngine, TraceAnalysis, geomean
+from repro.core.trace import Trace
+from repro.workloads import mlperf, registry
+
+
+def _random_trace(rng, n_ops, n_tensors, streaming=0.2) -> Trace:
+    tr = Trace("rand")
+    for i in range(n_ops):
+        reads, writes = [], []
+        for _ in range(int(rng.integers(0, 3))):
+            t = int(rng.integers(0, n_tensors))
+            nm = f"in.t{t}" if rng.random() < streaming else f"t{t}"
+            reads.append((nm, int(rng.integers(1, 20)) * MB))
+        for _ in range(int(rng.integers(0, 2))):
+            writes.append((f"t{int(rng.integers(0, n_tensors))}",
+                           int(rng.integers(1, 20)) * MB))
+        if reads or writes:
+            tr.emit(f"op{i}", 1e6, reads=reads, writes=writes)
+    return tr
+
+
+# --- kernel parity: vectorized vs per-touch reference -------------------------
+
+def test_mattson_vectorized_matches_reference():
+    rng = np.random.default_rng(7)
+    for trial in range(40):
+        n = int(rng.integers(1, 300))
+        ids = rng.integers(0, int(rng.integers(1, 16)), n)
+        if trial % 2:
+            sizes = rng.integers(1, 100, n).astype(float)  # per-touch sizes
+        else:
+            per_id = rng.integers(1, 100, ids.max() + 1).astype(float)
+            sizes = per_id[ids]                            # per-tensor sizes
+        got = _mattson_pass(ids, sizes)
+        want = _reference_mattson_pass(ids, sizes)
+        inf = np.isinf(want)
+        assert np.array_equal(np.isinf(got), inf)
+        assert np.allclose(got[~inf], want[~inf], rtol=1e-9, atol=1e-6)
+
+
+def test_mattson_empty_and_single():
+    assert len(_mattson_pass(np.zeros(0, np.int64), np.zeros(0))) == 0
+    d = _mattson_pass(np.array([3]), np.array([5.0]))
+    assert np.isinf(d[0])
+
+
+def test_traffic_below_vectorized_matches_reference():
+    rng = np.random.default_rng(11)
+    caps = [float(c) * MB for c in (1, 7, 33, 120, 1000)]
+    for _ in range(20):
+        tr = _random_trace(rng, int(rng.integers(3, 50)), int(rng.integers(2, 10)))
+        for cyclic in (True, False):
+            stream = build_stream(tr, cyclic=cyclic)
+            got = traffic_below(stream, caps)
+            want = _reference_traffic_below(stream, caps)
+            for g, w in zip(got, want):
+                assert np.allclose(g.fill, w.fill, rtol=1e-9, atol=1e-3)
+                assert np.allclose(g.writeback, w.writeback, rtol=1e-9, atol=1e-3)
+
+
+def test_traffic_below_capacity_batching_is_column_independent():
+    """Batched capacities must equal one-at-a-time evaluation exactly —
+    the property that lets the engine share one pass across a design space."""
+    rng = np.random.default_rng(3)
+    tr = _random_trace(rng, 40, 8)
+    stream = build_stream(tr)
+    caps = [float(c) * MB for c in (5, 50, 500)]
+    batched = traffic_below(stream, caps)
+    for i, c in enumerate(caps):
+        (single,) = traffic_below(stream, [c])
+        assert np.array_equal(single.fill, batched[i].fill)
+        assert np.array_equal(single.writeback, batched[i].writeback)
+
+
+def test_fractional_model_tracks_block_lru_random():
+    """Same magnitude bound as the hypothesis test in test_cachesim.py, but
+    seeded-numpy driven so it always runs (no hypothesis dependency)."""
+    rng = np.random.default_rng(5)
+    for _ in range(15):
+        tr = Trace("rand")
+        sizes = rng.integers(1, 16, 8)
+        for i in range(int(rng.integers(4, 40))):
+            tid = int(rng.integers(0, 8))
+            if rng.random() < 0.5:
+                tr.emit(f"op{i}", 0.0, writes=[(f"t{tid}", int(sizes[tid]) * MB)])
+            else:
+                tr.emit(f"op{i}", 0.0, reads=[(f"t{tid}", int(sizes[tid]) * MB)],
+                        writes=[(f"o{i}", MB)])
+        cap = int(rng.integers(2, 64)) * MB
+        stream = build_stream(tr, cyclic=False, reuse_buffers=False)
+        (res,) = traffic_below(stream, [cap])
+        lru = BlockLRU(cap, block_bytes=MB)
+        for _, t, b, w in tr.touches():
+            lru.touch_tensor(hash(t) % (1 << 30), b, w)
+        model, exact = res.total, lru.fill_bytes + lru.writeback_bytes
+        hi, lo = max(model, exact), min(model, exact)
+        assert hi - lo <= 0.80 * hi + 8 * MB
+
+
+# --- engine grid vs the single-trace APIs (bit-for-bit) -----------------------
+
+@pytest.fixture(scope="module")
+def transformer_trace():
+    return mlperf.training_trace("transformer", "large")
+
+
+def test_engine_matches_perfmodel_bit_for_bit(transformer_trace):
+    t = transformer_trace
+    grid = SweepEngine([t], configs=copa.TABLE_V).run()
+    pm = perfmodel.PerfModel(t)
+    for cfg in copa.TABLE_V:
+        spec = cfg.build()
+        r = pm.run(spec)
+        row = grid.result(t.name, cfg.name)
+        assert row.time_s == r.time_s, cfg.name
+        assert row.segments == r.segments, cfg.name
+        assert row.dram_bytes == r.dram_bytes
+        assert row.l3_bytes == r.l3_bytes
+        assert row.uhb_bytes == r.uhb_bytes
+        assert row.speedup == pm.time(hw.GPU_N) / r.time_s
+        en = pm.energy(spec)
+        assert row.dram_joules == en.dram_joules
+        assert row.l3_joules == en.l3_joules
+
+
+def test_engine_matches_dram_traffic_sweep_bit_for_bit(transformer_trace):
+    t = transformer_trace
+    caps = [60 * MB, 480 * MB, 960 * MB]
+    grid = SweepEngine([t], configs=[], extra_llc_capacities=caps).run()
+    sweep = dram_traffic_sweep(t, caps)
+    for c in caps:
+        assert grid.llc_traffic[t.name][float(c)] == sweep[c]
+
+
+def test_engine_grid_over_mlperf_suites_matches_reference_within_1e6():
+    """Acceptance: engine over (Table-V x MLPerf training+inference) matches
+    the per-touch reference kernels within 1e-6 relative on time/traffic."""
+    names = (registry.suite("mlperf.train.large")[:2]
+             + registry.suite("mlperf.infer.large")[:2])
+    traces = [registry.scenario(n) for n in names]
+    grid = SweepEngine(traces, configs=copa.TABLE_V).run()
+    for trace in traces:
+        ref_stream = build_stream(trace, dist_fn=_reference_mattson_pass)
+        ta = TraceAnalysis(trace, stream=ref_stream)
+        caps = sorted({c for cfg in copa.TABLE_V
+                       for c in TraceAnalysis.capacities_for(cfg.build())})
+        for cap, lt in zip(caps, _reference_traffic_below(ref_stream, caps)):
+            ta._levels[float(cap)] = lt
+        for cfg in copa.TABLE_V:
+            spec = cfg.build()
+            row = grid.result(trace.name, cfg.name)
+            t_ref = ta.time(spec)
+            assert abs(row.time_s - t_ref) <= 1e-6 * t_ref, (trace.name, cfg.name)
+            tr_ref = ta.hierarchy(spec)
+            assert abs(row.dram_bytes - tr_ref.dram.total) <= \
+                1e-6 * max(tr_ref.dram.total, 1.0)
+
+
+def test_engine_accepts_raw_specs_and_scenario_names():
+    grid = SweepEngine(
+        ["mlperf.infer.resnet.large"],
+        configs=[hw.GPU_N.with_(name="GPU-N@2xBW",
+                                dram_bandwidth=hw.GPU_N.dram_bandwidth * 2)],
+    ).run()
+    (row,) = grid.rows
+    assert row.config == "GPU-N@2xBW"
+    assert row.speedup >= 1.0 - 1e-12
+    assert row.kind == "inference"
+
+
+def test_grid_geomean_and_speedups():
+    names = registry.suite("mlperf.infer.large")[:3]
+    grid = SweepEngine(names, configs=[copa.HBM_L3]).run()
+    sp = grid.speedups("HBM+L3")
+    assert len(sp) == 3 and all(s > 0 for s in sp)
+    assert abs(grid.geomean_speedup("HBM+L3") - geomean(sp)) < 1e-12
+
+
+# --- registry -----------------------------------------------------------------
+
+def test_registry_enumerates_all_families():
+    names = registry.scenarios()
+    assert len([n for n in names if n.startswith("mlperf.train.")]) == 14
+    assert len([n for n in names if n.startswith("mlperf.infer.")]) == 10
+    assert len([n for n in names if n.startswith("lm.")]) == 40
+    assert len([n for n in names if n.startswith("hpc.")]) == 130
+
+
+def test_registry_scenario_factories_cache():
+    a = registry.scenario("mlperf.train.resnet.large")
+    b = registry.scenario("mlperf.train.resnet.large")
+    assert a is b  # lru-cached underneath
+    assert a.name == "resnet.train.large"
+    with pytest.raises(KeyError):
+        registry.scenario("nope.nothing")
+
+
+def test_registry_suites_cover_figures():
+    assert set(registry.suite("mlperf.train.large")) <= set(registry.scenarios())
+    assert len(registry.suite("hpc")) == 130
+    lm = registry.suite("lm.decode_32k")
+    assert all(n.endswith(".decode_32k") for n in lm)
