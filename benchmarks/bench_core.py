@@ -115,4 +115,42 @@ def bench_core(csv: Csv):
             f"(acceptance >= 10x; max rel diff vs reference {worst:.2e})")
 
 
-ALL = [bench_core]
+def bench_timemodel(csv: Csv):
+    """(config x op) batched time model vs the per-spec reference loop.
+
+    Both sides cost the full Table-V attribution (4 idealization terms per
+    config) on one real trace from a warm traffic cache, so the comparison
+    isolates exactly the matrix evaluation the engine now uses.
+    """
+    trace = mlperf.training_trace("transformer", "large")
+    ta = TraceAnalysis(trace)
+    specs = [_as_spec(c) for c in copa.TABLE_V]
+    caps = {c for s in specs for c in TraceAnalysis.capacities_for(s)}
+    ta.prefetch(caps)
+
+    def reference():
+        out = []
+        for s in specs:
+            t_act = ta._reference_time(s)
+            t_nd = ta._reference_time(s, ideal_dram=True)
+            t_nm = ta._reference_time(s, ideal_dram=True,
+                                      ideal_mem_other=True)
+            t_m = ta._reference_time(s, ideal_dram=True, ideal_mem_other=True,
+                                     ideal_occupancy=True)
+            out.append((t_act, {"Math": t_m,
+                                "SM util": max(t_nm - t_m, 0.0),
+                                "Memory others": max(t_nd - t_nm, 0.0),
+                                "DRAM BW": max(t_act - t_nd, 0.0)}))
+        return out
+
+    got, us_vec = timed_min(lambda: ta.attribution_batch(specs))
+    ref, us_ref = timed_min(reference)
+    worst = max(abs(g[0] - r[0]) / r[0] for g, r in zip(got, ref))
+    csv.add("core.timemodel.batched", us_vec,
+            f"{len(specs)} configs x {len(ta.flops)} ops")
+    csv.add("core.timemodel.reference", us_ref,
+            f"{us_ref / max(us_vec, 1e-9):.1f}x slower; "
+            f"max rel diff {worst:.1e}")
+
+
+ALL = [bench_core, bench_timemodel]

@@ -20,10 +20,11 @@ from benchmarks.common import (
     suite_trace_names,
     timed,
 )
-from repro.core import copa, hw, perfmodel
+from repro.core import copa, hw
 from repro.core.hw import GB, MB
 from repro.core.sweep import SweepEngine
 from repro.workloads import mlperf
+from repro.workloads.registry import scaleout as registry_scaleout
 from repro.workloads.registry import scenario
 from repro.workloads.registry import suite as registry_suite
 
@@ -229,28 +230,36 @@ def bench_fig11(csv: Csv):
 def bench_fig12(csv: Csv):
     """Fig 12: HBML+L3 vs 2x/4x GPU-N scale-out at fixed global batch.
 
-    The batch-override traces are unique to this figure, so it drives the
-    single-trace facade (PerfModel) — same engine machinery underneath.
+    One engine grid over (scale-out family x {GPU-N, HBML+L3} x {1,2,4}
+    GPU instances): the registry's ``scaleout.mlperf.train.*`` families map
+    each instance count to its per-GPU batch-override trace, and row
+    speedups are throughput ratios against the 1-GPU GPU-N baseline —
+    bit-identical to the seed's bespoke PerfModel loop (asserted in
+    tests/test_sweep.py). A second grid prices the gradient all-reduce over
+    a finite NVLink-class fabric, the projection the ideal-fabric paper
+    methodology omits.
     """
+    works = [f"scaleout.mlperf.train.{b}" for b in mlperf.TRAIN_BATCHES]
+    names = [registry_scaleout(w).name for w in works]
+
     def run():
-        copa_spec = copa.HBML_L3.build()
-        out = {}
-        sp_copa, sp_2x, sp_4x = [], [], []
-        for name in mlperf.TRAIN_BATCHES:
-            lb = mlperf.TRAIN_BATCHES[name][1]
-            pm_full = perfmodel.PerfModel(mlperf.training_trace(name, "large"))
-            t_base = pm_full.time(hw.GPU_N)
-            sp_copa.append(t_base / pm_full.time(copa_spec))
-            for n_gpus, acc in ((2, sp_2x), (4, sp_4x)):
-                per_gpu = max(lb // n_gpus, 1)
-                pm_n = perfmodel.PerfModel(mlperf.training_trace(
-                    name, "large", batch_override=per_gpu))
-                # throughput ratio at fixed global batch
-                thr = (per_gpu * n_gpus / pm_n.time(hw.GPU_N)) / (lb / t_base)
-                acc.append(thr)
-        out["copa"] = geomean(sp_copa)
-        out["2x"] = geomean(sp_2x)
-        out["4x"] = geomean(sp_4x)
+        grid = SweepEngine(works, configs=[copa.GPU_N_BASE, copa.HBML_L3],
+                           gpu_counts=(1, 2, 4)).run()
+        out = {
+            "copa": grid.geomean_speedup("HBML+L3", names),
+            "2x": geomean(grid.speedups("GPU-N", names, n_gpus=2)),
+            "4x": geomean(grid.speedups("GPU-N", names, n_gpus=4)),
+        }
+        # Instances of baseline GPU-N needed to match 1 COPA GPU, per trace;
+        # traces no swept count can match are reported, not averaged in.
+        matched = grid.instances_to_match("GPU-N", "HBML+L3", names)
+        reached = [n for n in matched.values() if n is not None]
+        out["instances"] = float(np.mean(reached)) if reached else float("nan")
+        out["reached"] = len(reached)
+        ici = SweepEngine(works, configs=[copa.GPU_N_BASE],
+                          gpu_counts=(2, 4), ici_bandwidth=600e9).run()
+        out["2x_ici"] = geomean(ici.speedups("GPU-N", names, n_gpus=2))
+        out["4x_ici"] = geomean(ici.speedups("GPU-N", names, n_gpus=4))
         return out
 
     out, us = timed(run)
@@ -259,6 +268,13 @@ def bench_fig12(csv: Csv):
     csv.add("fig12.4xGPU-N.speedup", us, f"{out['4x']:.3f} (paper 1.43)")
     csv.add("fig12.copa_matches_2x", us,
             f"{out['copa'] / out['2x']:.3f} (paper ~1.0 -> 50% fewer GPUs)")
+    csv.add("fig12.gpu_n_instances_per_copa", us,
+            f"{out['instances']:.2f} over {out['reached']}/{len(names)} "
+            f"matchable (paper 2.0 -> 50% fewer instances)")
+    csv.add("fig12.2xGPU-N.speedup_ici600", us,
+            f"{out['2x_ici']:.3f} (ring all-reduce @600GB/s)")
+    csv.add("fig12.4xGPU-N.speedup_ici600", us,
+            f"{out['4x_ici']:.3f} (ring all-reduce @600GB/s)")
 
 
 def bench_energy(csv: Csv):

@@ -1,7 +1,9 @@
 """The paper's design-space exploration through the public API: one
 SweepEngine grid over the COPA configurations (Table V) x the MLPerf-proxy
-suites AND the assigned LM architectures, printing the Fig-11-style table
-plus the software-MSM recommendation per LM cell.
+suites AND the assigned LM architectures, printing the Fig-11-style table,
+the Fig-12-style scale-out projection (instances x ICI fabric), the serving
+latency/throughput grid per MSM, and the software-MSM recommendation per LM
+cell.
 
     PYTHONPATH=src python examples/copa_design_sweep.py
 """
@@ -12,7 +14,7 @@ sys.path.insert(0, "src")
 import repro.configs as configs
 from repro.core import copa, msm
 from repro.core.hw import MB
-from repro.core.sweep import SweepEngine
+from repro.core.sweep import SweepEngine, geomean
 from repro.workloads import registry
 
 SUITES = ("mlperf.train.large", "mlperf.train.small",
@@ -33,6 +35,48 @@ def paper_suite_table():
         print(f"{cfg.name:12s} " + " ".join(cells))
 
 
+def scale_out_table():
+    """Fig-12-style projection: fixed-global-batch DP training across 1/2/4
+    GPU instances, ideal fabric vs a 600 GB/s ring all-reduce."""
+    print("\n=== Scale-out projection (Fig 12): instances x ICI fabric ===")
+    works = registry.scaleout_names("scaleout.mlperf.train.")
+    names = [registry.scaleout(w).name for w in works]
+    for label, ici in (("ideal fabric", float("inf")),
+                       ("600GB/s ring", 600e9)):
+        grid = SweepEngine(works, configs=[copa.GPU_N_BASE, copa.HBML_L3],
+                           gpu_counts=(1, 2, 4), ici_bandwidth=ici).run()
+        copa1 = grid.geomean_speedup("HBML+L3", names)
+        n2 = geomean(grid.speedups("GPU-N", names, n_gpus=2))
+        n4 = geomean(grid.speedups("GPU-N", names, n_gpus=4))
+        eff2 = geomean(grid.result(t, "GPU-N", 2).scaling_efficiency
+                       for t in names)
+        reached = [n for n in
+                   grid.instances_to_match("GPU-N", "HBML+L3", names).values()
+                   if n is not None]
+        inst = sum(reached) / len(reached) if reached else float("nan")
+        print(f"{label:14s} HBML+L3@1={copa1:5.3f}  GPU-Nx2={n2:5.3f} "
+              f"(eff {eff2:4.2f})  GPU-Nx4={n4:5.3f}  "
+              f"GPU-N instances/COPA={inst:.2f} "
+              f"({len(reached)}/{len(names)} matchable)")
+
+
+def serve_grid_table():
+    """Serving latency/throughput grid: batched decode per MSM config."""
+    print("\n=== Serving grid: batch x MSM (per-request latency, ms) ===")
+    configs_ = [copa.GPU_N_BASE, copa.HBM_L3, copa.HBML_L3]
+    header = f"{'batch':>6s}" + "".join(f" {c.name:>10s}" for c in configs_)
+    print(header)
+    for b in registry.SERVE_BATCHES:
+        names = registry.suite(f"serve.b{b}")
+        grid = SweepEngine(names, configs=configs_).run()
+        cells = []
+        for c in configs_:
+            lat = geomean(grid.result(registry.scenario(n).name, c.name).time_s
+                          for n in names) * 1e3
+            cells.append(f" {lat:10.3f}")
+        print(f"{b:6d}" + "".join(cells))
+
+
 def arch_msm_table():
     print("\n=== Assigned architectures: COPA analysis + software-MSM ===")
     for arch in configs.ARCHS:
@@ -47,4 +91,6 @@ def arch_msm_table():
 
 if __name__ == "__main__":
     paper_suite_table()
+    scale_out_table()
+    serve_grid_table()
     arch_msm_table()

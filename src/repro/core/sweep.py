@@ -10,29 +10,44 @@ is the single substrate for that shape:
   :class:`~repro.core.cachesim.LevelTraffic`. Missing capacities are computed
   in ONE vectorized :func:`~repro.core.cachesim.traffic_below` call; since
   capacity columns are independent there, batching is bit-identical to
-  evaluating capacities one at a time. The bottleneck time model and the
-  paper's Fig-2 attribution live here; ``repro.core.perfmodel.PerfModel`` is
-  now a thin facade over this class.
+  evaluating capacities one at a time. The bottleneck time model evaluates a
+  whole config list as one (config x op) matrix (:meth:`TraceAnalysis
+  .time_batch`); the per-spec scalar loop survives as the
+  :meth:`TraceAnalysis._reference_time` parity oracle. The paper's Fig-2
+  attribution lives here too; ``repro.core.perfmodel.PerfModel`` is a thin
+  facade over this class.
 
 * :class:`SweepEngine` — evaluates a grid of (trace x config x extra LLC
-  capacity) in one pass per trace: the union of every capacity any config
-  needs is prefetched in a single batched traffic call, then each config is
-  costed from the shared cache. Configs may be
+  capacity x GPU count) in one pass per trace: the union of every capacity
+  any config touches is prefetched in a single batched traffic call, then
+  every config is costed from the shared cache with one (config x op)
+  matrix evaluation per attribution term. Configs may be
   :class:`~repro.core.copa.CopaConfig` (``build()`` is called for you) or
   raw :class:`~repro.core.hw.GpuSpec` (for bandwidth/capacity sensitivity
-  sweeps like Figs 8-10). Traces may be :class:`~repro.core.trace.Trace`
-  objects or scenario names resolved through
-  ``repro.workloads.registry``.
+  sweeps like Figs 8-10). Workloads may be :class:`~repro.core.trace.Trace`
+  objects, scenario names resolved through ``repro.workloads.registry``, or
+  :class:`ScaleOutWorkload` families whose per-GPU trace depends on the
+  instance count (the paper's Fig-12 fixed-global-batch scale-out).
 
 * :class:`SweepResult` / :class:`SweepGrid` — structured rows (time,
-  per-segment attribution, DRAM/L3/UHB bytes, energy, speedup vs baseline)
-  with geomean helpers over arbitrary trace subsets.
+  per-segment attribution, DRAM/L3/UHB bytes, energy, speedup vs baseline,
+  scale-out terms: per-GPU vs collective time, throughput, scaling
+  efficiency) with geomean and instances-to-target-throughput helpers over
+  arbitrary trace subsets.
+
+Scale-out model (paper Fig 12 / §V): ``n`` data-parallel GPU instances each
+replay the per-GPU trace; training instances synchronize gradients with a
+ring all-reduce over the inter-GPU fabric (``ici_bandwidth`` per direction,
+:func:`ring_allreduce_time`). The default fabric is ideal (infinite
+bandwidth), matching the paper's methodology of charging scale-out only for
+the lost per-GPU batch efficiency; a finite bandwidth adds the collective
+term to every training step.
 """
 from __future__ import annotations
 
 from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Iterable, Sequence, Union
+from typing import Callable, Iterable, Sequence, Union
 
 import numpy as np
 
@@ -68,6 +83,21 @@ def bottleneck_of(segments: dict[str, float]) -> str:
     return max(segs, key=segs.get) if segs else "Math"
 
 
+def ring_allreduce_time(nbytes: float, n_gpus: int, bandwidth: float,
+                        latency_s: float = 0.0) -> float:
+    """Ring all-reduce step time: each GPU moves ``2(n-1)/n`` of the payload
+    through its ``bandwidth`` (bytes/s per direction) link in ``2(n-1)``
+    latency-bound steps. Zero for one GPU, nothing to reduce, or an ideal
+    (infinite-bandwidth) fabric. A non-positive bandwidth is an error, not
+    a free fabric — 0 cannot mean both 'no link' and 'ideal link'."""
+    if bandwidth <= 0:
+        raise ValueError(f"ici bandwidth must be > 0, got {bandwidth!r}")
+    if n_gpus <= 1 or nbytes <= 0 or not np.isfinite(bandwidth):
+        return 0.0
+    return (2.0 * (n_gpus - 1) / n_gpus * nbytes / bandwidth
+            + 2.0 * (n_gpus - 1) * latency_s)
+
+
 def _as_spec(config: ConfigLike) -> GpuSpec:
     return config.build() if isinstance(config, CopaConfig) else config
 
@@ -84,6 +114,38 @@ def _resolve_trace(t: TraceLike) -> Trace:
     return t
 
 
+@dataclass(frozen=True)
+class ScaleOutWorkload:
+    """A workload family whose per-GPU trace depends on the instance count.
+
+    ``trace_for(n)`` returns the trace ONE GPU replays when the workload is
+    spread across ``n`` data-parallel instances. Fixed-global-batch training
+    (paper Fig 12) shrinks the per-GPU batch as ``n`` grows (strong
+    scaling); returning the same trace at every ``n`` models weak scaling
+    (per-instance serving at fixed per-GPU load). ``trace_for(1)`` anchors
+    the baseline time and throughput."""
+
+    name: str
+    trace_for: Callable[[int], Trace]
+
+
+WorkloadLike = Union[Trace, str, ScaleOutWorkload]
+
+
+def _as_workload(t: WorkloadLike) -> ScaleOutWorkload:
+    if isinstance(t, ScaleOutWorkload):
+        return t
+    if isinstance(t, str):
+        from repro.workloads import registry  # lazy: workloads sit above core
+
+        resolved = registry.resolve(t)
+        if isinstance(resolved, ScaleOutWorkload):
+            return resolved
+        t = resolved
+    trace = t
+    return ScaleOutWorkload(name=trace.name, trace_for=lambda n: trace)
+
+
 class TraceAnalysis:
     """Capacity-independent analysis of one trace + shared traffic cache."""
 
@@ -98,6 +160,7 @@ class TraceAnalysis:
         self._levels: dict[float, LevelTraffic] = {}
         self._l2_touch: np.ndarray | None = None
         self._occ: dict[int, np.ndarray] = {}  # spec concurrency -> occupancy
+        self._grad_bytes: float | None = None
 
     # -- traffic ---------------------------------------------------------------
     @property
@@ -109,6 +172,20 @@ class TraceAnalysis:
             np.add.at(l2, self.stream.op_idx[half:], self.stream.sizes[half:])
             self._l2_touch = l2
         return self._l2_touch
+
+    @property
+    def grad_bytes(self) -> float:
+        """Bytes all-reduced per iteration under data parallelism: the
+        unique gradient tensors (``g.*``) this trace writes. Zero for
+        inference traces (no gradients, instances are independent)."""
+        if self._grad_bytes is None:
+            seen: dict[str, int] = {}
+            for op in self.trace.ops:
+                for t, b in op.writes:
+                    if t.startswith("g."):
+                        seen[t] = max(seen.get(t, 0), b)
+            self._grad_bytes = float(sum(seen.values()))
+        return self._grad_bytes
 
     def prefetch(self, capacities: Iterable[float]) -> None:
         """Compute all not-yet-cached capacities in one batched trace pass."""
@@ -143,6 +220,82 @@ class TraceAnalysis:
         return HierarchyTraffic(self.l2_touch, post_l2, post_l2, has_l3=False)
 
     # -- bottleneck time model (paper Fig-2 machinery) -------------------------
+    def _occupancy(self, spec: GpuSpec) -> np.ndarray:
+        # Occupancy is sublinear in exposed parallelism: a kernel filling 10%
+        # of the machine still extracts >10% of peak thanks to ILP, split-K
+        # decompositions and cache effects (exponent calibrated against the
+        # paper's Fig-2 small-batch attribution).
+        occ = self._occ.get(spec.concurrency)
+        if occ is None:
+            occ = np.minimum(1.0, self.parallelism / spec.concurrency) ** 0.55
+            self._occ[spec.concurrency] = occ
+        return occ
+
+    def time_batch(
+        self,
+        specs: Sequence[GpuSpec],
+        ideal_dram: bool = False,
+        ideal_mem_other: bool = False,
+        ideal_occupancy: bool = False,
+        per_op: bool = False,
+    ) -> np.ndarray:
+        """One (config x op) matrix evaluation of the bottleneck time model.
+
+        Returns per-spec total seconds of shape ``(len(specs),)`` — or the
+        full ``(len(specs), n_ops)`` matrix with ``per_op=True``. Each row is
+        bit-identical to :meth:`_reference_time` on that spec alone: every
+        step is elementwise, so batching configs cannot change a row.
+        """
+        specs = list(specs)
+        n_ops = len(self.flops)
+        if not specs:
+            return np.zeros((0, n_ops)) if per_op else np.zeros(0)
+        trs = [self.hierarchy(sp) for sp in specs]
+        if ideal_occupancy:
+            occ = np.ones((len(specs), n_ops))
+        else:
+            occ = np.stack([self._occupancy(sp) for sp in specs]) \
+                if n_ops else np.ones((len(specs), 0))
+        f_tc = np.array([sp.fp16_tflops for sp in specs])[:, None] * 1e12
+        f_fp32 = np.array([sp.fp32_tflops for sp in specs])[:, None] * 1e12
+        fmath = np.where(self.is_tc[None, :], f_tc, f_fp32) * occ
+        flops = np.broadcast_to(self.flops[None, :], fmath.shape)
+        t_math = np.divide(flops, fmath, out=np.zeros_like(fmath),
+                           where=fmath > 0)
+
+        if ideal_mem_other:
+            t_l2 = np.zeros_like(fmath)
+            t_uhb = np.zeros_like(fmath)
+        else:
+            l2_bw = np.array([sp.l2_bandwidth for sp in specs])[:, None]
+            t_l2 = self.l2_touch[None, :] / (l2_bw * occ)
+            has_uhb = np.array([tr.has_l3 and sp.l3_bandwidth > 0
+                                for tr, sp in zip(trs, specs)])
+            if has_uhb.any():
+                # UHB is per-direction (paper: 2xRD + 2xWR).
+                l3_bw = np.array([sp.l3_bandwidth if u else 1.0
+                                  for sp, u in zip(specs, has_uhb)])[:, None]
+                fill = np.stack([tr.post_l2.fill for tr in trs])
+                wb = np.stack([tr.post_l2.writeback for tr in trs])
+                t_uhb = np.where(has_uhb[:, None],
+                                 np.maximum(fill / l3_bw, wb / l3_bw), 0.0)
+            else:
+                t_uhb = np.zeros_like(fmath)
+
+        if ideal_dram:
+            t_dram = np.zeros_like(fmath)
+        else:
+            dram_bw = np.array([sp.dram_bandwidth for sp in specs])[:, None]
+            dram_tot = np.stack([tr.dram.fill + tr.dram.writeback
+                                 for tr in trs])
+            t_dram = dram_tot / dram_bw
+
+        overhead = 0.0 if ideal_occupancy else LAUNCH_OVERHEAD_S
+        t_op = np.maximum.reduce([t_math, t_l2, t_uhb, t_dram]) + overhead
+        if per_op:
+            return t_op
+        return t_op.sum(axis=-1)
+
     def time(
         self,
         spec: GpuSpec,
@@ -151,22 +304,35 @@ class TraceAnalysis:
         ideal_occupancy: bool = False,
         per_op: bool = False,
     ):
+        """Single-spec facade over :meth:`time_batch` (one-row matrix)."""
+        out = self.time_batch(
+            [spec],
+            ideal_dram=ideal_dram,
+            ideal_mem_other=ideal_mem_other,
+            ideal_occupancy=ideal_occupancy,
+            per_op=per_op,
+        )
+        return out[0] if per_op else float(out[0])
+
+    def _reference_time(
+        self,
+        spec: GpuSpec,
+        ideal_dram: bool = False,
+        ideal_mem_other: bool = False,
+        ideal_occupancy: bool = False,
+        per_op: bool = False,
+    ):
+        """Per-spec scalar-loop oracle the batched path is tested against."""
         tr = self.hierarchy(spec)
-        # Occupancy is sublinear in exposed parallelism: a kernel filling 10%
-        # of the machine still extracts >10% of peak thanks to ILP, split-K
-        # decompositions and cache effects (exponent calibrated against the
-        # paper's Fig-2 small-batch attribution).
         if ideal_occupancy:
             occ = np.ones_like(self.parallelism)
         else:
-            occ = self._occ.get(spec.concurrency)
-            if occ is None:
-                occ = np.minimum(1.0, self.parallelism / spec.concurrency) ** 0.55
-                self._occ[spec.concurrency] = occ
+            occ = self._occupancy(spec)
         f_tc = spec.fp16_tflops * 1e12
         f_fp32 = spec.fp32_tflops * 1e12
         fmath = np.where(self.is_tc, f_tc, f_fp32) * occ
-        t_math = np.divide(self.flops, fmath, out=np.zeros_like(self.flops), where=fmath > 0)
+        t_math = np.divide(self.flops, fmath, out=np.zeros_like(self.flops),
+                           where=fmath > 0)
 
         if ideal_mem_other:
             t_l2 = np.zeros(len(self.flops))
@@ -193,20 +359,34 @@ class TraceAnalysis:
             return t_op
         return float(t_op.sum())
 
+    def attribution_batch(
+        self, specs: Sequence[GpuSpec]
+    ) -> list[tuple[float, dict[str, float]]]:
+        """Actual time + the paper's peel-order attribution for every spec.
+
+        Four matrix evaluations total — instead of four per config — which
+        is where the engine's remaining per-config cost used to go.
+        """
+        specs = list(specs)
+        t_act = self.time_batch(specs)
+        t_no_dram = self.time_batch(specs, ideal_dram=True)
+        t_no_mem = self.time_batch(specs, ideal_dram=True,
+                                   ideal_mem_other=True)
+        t_math = self.time_batch(specs, ideal_dram=True, ideal_mem_other=True,
+                                 ideal_occupancy=True)
+        out = []
+        for act, nd, nm, m in zip(t_act, t_no_dram, t_no_mem, t_math):
+            out.append((float(act), {
+                "Math": float(m),
+                "SM util": max(float(nm) - float(m), 0.0),
+                "Memory others": max(float(nd) - float(nm), 0.0),
+                "DRAM BW": max(float(act) - float(nd), 0.0),
+            }))
+        return out
+
     def attribution(self, spec: GpuSpec) -> tuple[float, dict[str, float]]:
         """Actual time + the paper's peel-order cost attribution."""
-        t_act = self.time(spec)
-        t_no_dram = self.time(spec, ideal_dram=True)
-        t_no_mem = self.time(spec, ideal_dram=True, ideal_mem_other=True)
-        t_math = self.time(
-            spec, ideal_dram=True, ideal_mem_other=True, ideal_occupancy=True
-        )
-        return t_act, {
-            "Math": t_math,
-            "SM util": max(t_no_mem - t_math, 0.0),
-            "Memory others": max(t_no_dram - t_no_mem, 0.0),
-            "DRAM BW": max(t_act - t_no_dram, 0.0),
-        }
+        return self.attribution_batch([spec])[0]
 
     def energy(self, spec: GpuSpec) -> EnergyReport:
         tr = self.hierarchy(spec)
@@ -219,13 +399,18 @@ class TraceAnalysis:
 # analysis pins O(touches x capacities) arrays — evict the oldest instead of
 # leaking. The workload-registry traces are lru-cached module-side, so the
 # hot set stays comfortably within the bound.
-_ANALYSES: OrderedDict[tuple[int, bool], tuple[Trace, TraceAnalysis]] = OrderedDict()
+_ANALYSES: OrderedDict[tuple[int, int, bool], tuple[Trace, TraceAnalysis]] = OrderedDict()
 _ANALYSES_MAX = 512
 
 
 def analysis_for(trace: Trace, cyclic: bool = True) -> TraceAnalysis:
-    """Process-wide TraceAnalysis cache (keyed by trace identity)."""
-    key = (id(trace), cyclic)
+    """Process-wide TraceAnalysis cache (keyed by trace identity).
+
+    The op count is part of the key so a trace that grows after being
+    analyzed (emit() between sweeps) gets a fresh analysis instead of the
+    stale stream; in-place edits of existing ops are still on the caller.
+    """
+    key = (id(trace), len(trace.ops), cyclic)
     hit = _ANALYSES.get(key)
     if hit is None or hit[0] is not trace:
         _ANALYSES[key] = (trace, TraceAnalysis(trace, cyclic=cyclic))
@@ -238,26 +423,36 @@ def analysis_for(trace: Trace, cyclic: bool = True) -> TraceAnalysis:
 
 @dataclass(frozen=True)
 class SweepResult:
-    """One (trace, config) cell of the design-space grid."""
+    """One (trace, config, GPU count) cell of the design-space grid."""
 
     trace: str
     kind: str                     # "training" | "inference" | "hpc" | ...
     config: str
     spec_name: str
-    time_s: float
-    baseline_time_s: float
-    speedup: float                # baseline_time / time
-    segments: dict[str, float]    # paper Fig-2 attribution
+    time_s: float                 # full step: per-GPU compute + collective
+    baseline_time_s: float        # baseline config, ONE GPU, full batch
+    speedup: float                # throughput ratio vs that 1-GPU baseline
+    segments: dict[str, float]    # paper Fig-2 attribution (per-GPU compute)
     dram_bytes: float
     l3_bytes: float
     uhb_bytes: float
     l2_bytes: float
     dram_joules: float
     l3_joules: float
+    # -- scale-out terms (all trivial at the default n_gpus=1) -----------------
+    n_gpus: int = 1
+    per_gpu_time_s: float = 0.0   # compute-only time of one instance
+    collective_time_s: float = 0.0  # gradient all-reduce over the ICI fabric
+    throughput: float = 0.0       # samples/s across all instances
+    scaling_efficiency: float = 1.0  # speedup / (n_gpus * speedup@1GPU)
 
     @property
     def total_joules(self) -> float:
         return self.dram_joules + self.l3_joules
+
+    @property
+    def per_instance_throughput(self) -> float:
+        return self.throughput / max(self.n_gpus, 1)
 
     @property
     def bottleneck(self) -> str:
@@ -272,14 +467,21 @@ class SweepGrid:
     rows: list[SweepResult] = field(default_factory=list)
     # trace name -> LLC capacity -> total traffic below that capacity
     llc_traffic: dict[str, dict[float, float]] = field(default_factory=dict)
-    _index: dict[tuple[str, str], SweepResult] = field(default_factory=dict)
+    _index: dict[tuple[str, str, int], SweepResult] = field(default_factory=dict)
 
     def add(self, row: SweepResult) -> None:
         self.rows.append(row)
-        self._index[(row.trace, row.config)] = row
+        self._index[(row.trace, row.config, row.n_gpus)] = row
 
-    def result(self, trace: str, config: str) -> SweepResult:
-        return self._index[(trace, config)]
+    def result(self, trace: str, config: str, n_gpus: int = 1) -> SweepResult:
+        try:
+            return self._index[(trace, config, n_gpus)]
+        except KeyError:
+            raise KeyError(
+                f"no grid row (trace={trace!r}, config={config!r}, "
+                f"n_gpus={n_gpus}); this grid swept gpu_counts="
+                f"{self.gpu_counts} over configs {self.configs}"
+            ) from None
 
     @property
     def configs(self) -> list[str]:
@@ -295,43 +497,97 @@ class SweepGrid:
             seen.setdefault(r.trace)
         return list(seen)
 
-    def speedups(self, config: str, traces: Sequence[str] | None = None) -> list[float]:
-        names = list(traces) if traces is not None else self.traces
-        return [self._index[(t, config)].speedup for t in names]
+    @property
+    def gpu_counts(self) -> list[int]:
+        return sorted({r.n_gpus for r in self.rows})
 
-    def geomean_speedup(self, config: str, traces: Sequence[str] | None = None) -> float:
-        return geomean(self.speedups(config, traces))
+    def speedups(self, config: str, traces: Sequence[str] | None = None,
+                 n_gpus: int = 1) -> list[float]:
+        names = list(traces) if traces is not None else self.traces
+        return [self._index[(t, config, n_gpus)].speedup for t in names]
+
+    def geomean_speedup(self, config: str,
+                        traces: Sequence[str] | None = None,
+                        n_gpus: int = 1) -> float:
+        return geomean(self.speedups(config, traces, n_gpus=n_gpus))
+
+    def instances_to_target(self, trace: str, config: str,
+                            target_speedup: float) -> int | None:
+        """Smallest swept instance count at which ``config`` reaches the
+        target throughput speedup on ``trace`` (None when no swept count
+        does) — the paper's GPU-instances-to-match-COPA question."""
+        rows = sorted((r for r in self.rows
+                       if r.trace == trace and r.config == config),
+                      key=lambda r: r.n_gpus)
+        for r in rows:
+            if r.speedup >= target_speedup:
+                return r.n_gpus
+        return None
+
+    def instances_to_match(self, config: str, target_config: str,
+                           traces: Sequence[str] | None = None
+                           ) -> dict[str, int | None]:
+        """Per trace: swept instances of ``config`` needed to match one
+        ``target_config`` GPU's throughput (None where even the largest
+        swept count falls short — report it, don't invent a number)."""
+        names = list(traces) if traces is not None else self.traces
+        return {t: self.instances_to_target(
+                    t, config, self.result(t, target_config).speedup)
+                for t in names}
 
 
 class SweepEngine:
-    """One batched pipeline over (traces x configs x extra LLC capacities).
+    """One batched pipeline over (traces x configs x LLC capacities x GPUs).
 
-    Per trace the engine builds (or reuses) a :class:`TraceAnalysis`,
+    Per workload the engine builds (or reuses) a :class:`TraceAnalysis`,
     prefetches the union of every capacity any config touches in a single
-    vectorized pass, then costs each config from the shared cache — the
-    whole Table-V design space costs one trace walk instead of one per
-    config.
+    vectorized pass, then costs ALL configs from the shared cache with one
+    (config x op) matrix evaluation per attribution term — the whole
+    Table-V design space costs one trace walk instead of one per config.
+
+    ``gpu_counts`` adds the scale-out dimension: every workload is also
+    projected onto n data-parallel instances (per-GPU trace from
+    :class:`ScaleOutWorkload.trace_for`, or the same trace for weak
+    scaling), with training steps charged a gradient ring all-reduce over
+    the ``ici_bandwidth`` fabric. Rows carry throughput and scaling
+    efficiency against the 1-GPU baseline config.
     """
 
     def __init__(
         self,
-        traces: Iterable[TraceLike],
+        traces: Iterable[WorkloadLike],
         configs: Sequence[ConfigLike] | None = None,
         baseline: ConfigLike | None = None,
         extra_llc_capacities: Sequence[float] = (),
         cyclic: bool = True,
         share_analyses: bool = True,
+        gpu_counts: Sequence[int] = (1,),
+        ici_bandwidth: float = float("inf"),
+        ici_latency_s: float = 0.0,
     ):
-        self.traces = [_resolve_trace(t) for t in traces]
+        self.workloads = [_as_workload(t) for t in traces]
         self.configs = list(configs if configs is not None else copa_mod.TABLE_V)
         self.baseline = baseline if baseline is not None else copa_mod.GPU_N_BASE
         self.extra_llc_capacities = [float(c) for c in extra_llc_capacities]
         self.cyclic = cyclic
+        self.gpu_counts = sorted({int(n) for n in gpu_counts})
+        if any(n < 1 for n in self.gpu_counts):
+            raise ValueError("gpu_counts must be >= 1")
+        if float(ici_bandwidth) <= 0:
+            raise ValueError("ici_bandwidth must be > 0 bytes/s "
+                             "(use the default inf for an ideal fabric)")
+        self.ici_bandwidth = float(ici_bandwidth)
+        self.ici_latency_s = float(ici_latency_s)
         # share_analyses=False keeps this engine's analyses private — used by
         # cold-cache benchmarking; everything else should share the process
         # cache so figures/tests reuse streams and traffic.
         self._share = share_analyses
         self._private: dict[int, TraceAnalysis] = {}
+
+    @property
+    def traces(self) -> list[Trace]:
+        """The 1-GPU trace of every workload (back-compat accessor)."""
+        return [w.trace_for(1) for w in self.workloads]
 
     def analysis(self, trace: Trace) -> TraceAnalysis:
         if self._share:
@@ -344,38 +600,72 @@ class SweepEngine:
     def run(self) -> SweepGrid:
         base_spec = _as_spec(self.baseline)
         specs = [(_config_name(c), _as_spec(c)) for c in self.configs]
+        spec_objs = [spec for _, spec in specs]
         grid = SweepGrid(baseline=_config_name(self.baseline))
-        for trace in self.traces:
-            ta = self.analysis(trace)
-            caps: set[float] = set(self.extra_llc_capacities)
-            for _, spec in specs:
-                caps.update(TraceAnalysis.capacities_for(spec))
-            caps.update(TraceAnalysis.capacities_for(base_spec))
-            ta.prefetch(caps)
+        caps: set[float] = set(self.extra_llc_capacities)
+        for _, spec in specs:
+            caps.update(TraceAnalysis.capacities_for(spec))
+        caps.update(TraceAnalysis.capacities_for(base_spec))
 
-            t_base = ta.time(base_spec)
-            for name, spec in specs:
-                t_act, segments = ta.attribution(spec)
-                tr = ta.hierarchy(spec)
-                en = ta.energy(spec)
-                grid.add(SweepResult(
-                    trace=trace.name,
-                    kind=trace.kind,
-                    config=name,
-                    spec_name=spec.name,
-                    time_s=t_act,
-                    baseline_time_s=t_base,
-                    speedup=t_base / t_act,
-                    segments=segments,
-                    dram_bytes=tr.dram.total,
-                    l3_bytes=tr.l3_bytes,
-                    uhb_bytes=tr.post_l2.total if tr.has_l3 else 0.0,
-                    l2_bytes=float(ta.l2_touch.sum()),
-                    dram_joules=en.dram_joules,
-                    l3_joules=en.l3_joules,
-                ))
+        for w in self.workloads:
+            trace1 = w.trace_for(1)
+            ta1 = self.analysis(trace1)
+            ta1.prefetch(caps)
+            t_base = ta1.time(base_spec)
+            att1 = ta1.attribution_batch(spec_objs)
+            base_batch = trace1.batch_size
+            # 1-GPU speedup per config anchors the scaling-efficiency ratio.
+            sp1 = {name: (t_base / att[0] if att[0] > 0 else float("inf"))
+                   for (name, _), att in zip(specs, att1)}
+
+            for n in self.gpu_counts:
+                trace_n = trace1 if n == 1 else w.trace_for(n)
+                if trace_n is trace1:
+                    ta, att = ta1, att1
+                else:
+                    ta = self.analysis(trace_n)
+                    ta.prefetch(caps)
+                    att = ta.attribution_batch(spec_objs)
+                coll = ring_allreduce_time(
+                    ta.grad_bytes, n, self.ici_bandwidth, self.ici_latency_s
+                ) if trace_n.kind == "training" else 0.0
+                batch_n = trace_n.batch_size
+
+                for (name, spec), (t_act, segments) in zip(specs, att):
+                    time_s = t_act + coll
+                    if n == 1 and coll == 0.0:
+                        sp = t_base / time_s
+                    elif batch_n and base_batch:
+                        # throughput ratio at whatever the global batch is
+                        sp = (batch_n * n / time_s) / (base_batch / t_base)
+                    else:
+                        sp = n * t_base / time_s  # batchless: weak scaling
+                    eff = sp / (n * sp1[name]) if sp1[name] > 0 else 1.0
+                    tr = ta.hierarchy(spec)
+                    en = ta.energy(spec)
+                    grid.add(SweepResult(
+                        trace=w.name,
+                        kind=trace_n.kind,
+                        config=name,
+                        spec_name=spec.name,
+                        time_s=time_s,
+                        baseline_time_s=t_base,
+                        speedup=sp,
+                        segments=segments,
+                        dram_bytes=tr.dram.total,
+                        l3_bytes=tr.l3_bytes,
+                        uhb_bytes=tr.post_l2.total if tr.has_l3 else 0.0,
+                        l2_bytes=float(ta.l2_touch.sum()),
+                        dram_joules=en.dram_joules,
+                        l3_joules=en.l3_joules,
+                        n_gpus=n,
+                        per_gpu_time_s=t_act,
+                        collective_time_s=coll,
+                        throughput=(batch_n or 1) * n / time_s,
+                        scaling_efficiency=eff,
+                    ))
             if self.extra_llc_capacities:
-                grid.llc_traffic[trace.name] = ta.dram_traffic(
+                grid.llc_traffic[w.name] = ta1.dram_traffic(
                     self.extra_llc_capacities
                 )
         return grid

@@ -27,9 +27,9 @@ import jax
 import repro.configs as configs
 from repro.configs.base import cell_is_runnable
 from repro.core.hloparse import parse_collectives
-from repro.core.hlo_cost import analyze_hlo_cost
+from repro.core.hlo_cost import analyze_hlo_cost, raw_cost_analysis
 from repro.core.roofline import model_flops_lm
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import make_production_mesh, set_default_mesh
 from repro.launch.specs import input_specs, optim_config_for
 from repro.core import msm
 from repro.train import make_train_step
@@ -104,23 +104,19 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool) -> dict:
     step_fn, jit_kw = build_step(kind, model, policy, abstract_args,
                                  mesh=mesh, global_batch=shape.global_batch)
 
-    ctx = jax.sharding.use_mesh(mesh) if hasattr(jax.sharding, "use_mesh")         else None
-    jax.sharding.set_mesh(mesh)
-    try:
-        lowered = jax.jit(step_fn, out_shardings=out_sh,
-                          **jit_kw).lower(*abstract_args)
-        t_lower = time.time() - t0
-        compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
+    set_default_mesh(mesh)
+    lowered = jax.jit(step_fn, out_shardings=out_sh,
+                      **jit_kw).lower(*abstract_args)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
 
-        mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis()
-        hlo_text = compiled.as_text()
-        coll = parse_collectives(hlo_text)
-        # trip-count-expanded accounting (XLA counts while bodies once)
-        adj = analyze_hlo_cost(hlo_text)
-    finally:
-        pass
+    mem = compiled.memory_analysis()
+    cost = raw_cost_analysis(compiled)
+    hlo_text = compiled.as_text()
+    coll = parse_collectives(hlo_text)
+    # trip-count-expanded accounting (XLA counts while bodies once)
+    adj = analyze_hlo_cost(hlo_text)
 
     chips = mesh.devices.size
     tokens = shape.global_batch * (shape.seq_len if kind != "decode" else 1)

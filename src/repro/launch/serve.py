@@ -17,7 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 import repro.configs as configs
-from repro.launch.mesh import make_host_mesh
+from repro.launch.mesh import make_host_mesh, set_default_mesh
 from repro.models import LanguageModel
 from repro.serve.step import make_decode_step
 
@@ -71,7 +71,7 @@ def main(argv=None):
 
     cfg = configs.get(args.arch)
     mesh = make_host_mesh()
-    jax.sharding.set_mesh(mesh)
+    set_default_mesh(mesh)
     model = LanguageModel(cfg)
     params = model.init(jax.random.PRNGKey(0))
     engine = ServingEngine(model, params, args.batch, args.max_len)

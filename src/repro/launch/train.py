@@ -22,7 +22,7 @@ from repro.core import msm
 from repro.data.pipeline import DataConfig, DataLoader
 from repro.ft import ElasticRunner, RunState, StepWatchdog
 from repro.checkpoint.ckpt import restore, latest_step
-from repro.launch.mesh import make_host_mesh
+from repro.launch.mesh import make_host_mesh, set_default_mesh
 from repro.models import LanguageModel
 from repro.models.base import abstract_params
 from repro.sharding.partition import batch_spec, param_shardings
@@ -40,7 +40,7 @@ def build(args, mesh, restore_step=None):
                           total_steps=args.steps)
     aparams = abstract_params(model.specs())
     shardings = param_shardings(model.axes(), aparams, mesh)
-    jax.sharding.set_mesh(mesh)
+    set_default_mesh(mesh)
     if restore_step is not None:
         _, tree, extra = restore(
             args.ckpt_dir, restore_step,

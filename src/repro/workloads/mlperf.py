@@ -324,7 +324,10 @@ def training_trace(name: str, batch_setting: str = "large",
     batch = batch_override or (large if batch_setting == "large" else small)
     mb = _build_train(name, batch)
     t = mb.trace(training=True, batch_size=batch, optimizer=_OPTIM[name])
-    t.name = f"{name}.train.{batch_setting}"
+    # Batch-override traces get a distinct name: grids key rows by trace
+    # name, and a scale-out sweep holds several batches of one benchmark.
+    t.name = f"{name}.train.{batch_setting}" if batch_override is None \
+        else f"{name}.train.b{batch}"
     return t
 
 
@@ -335,7 +338,8 @@ def inference_trace(name: str, batch_setting: str = "large",
     batch = batch_override or (large if batch_setting == "large" else small)
     mb = _build_infer(name, batch)
     t = mb.trace(training=False, batch_size=batch)
-    t.name = f"{name}.infer.{batch_setting}"
+    t.name = f"{name}.infer.{batch_setting}" if batch_override is None \
+        else f"{name}.infer.b{batch}"
     return t
 
 

@@ -6,25 +6,41 @@ evaluation space by name:
 
 * ``mlperf.train.<bench>.<setting>`` / ``mlperf.infer.<bench>.<setting>`` —
   the paper's Table-III MLPerf proxies at ``large``/``small`` batch;
+* ``serve.mlperf.<bench>.b<batch>`` — batched-decode serving grid points:
+  the inference benchmarks at explicit batch sizes, so latency/throughput
+  grids sweep batch x MSM policy (Table-V config), not just per hardware
+  config;
 * ``lm.<arch>.<shape>`` — the assigned LM architectures x shapes
   (``repro.configs``), e.g. ``lm.deepseek_v2_236b.decode_32k``;
 * ``hpc.<family>.<k>`` — the 130-app Fig-3 HPC proxy population.
 
-Suites group scenarios the way the paper's figures do (``mlperf.train.large``,
-``lm.decode_32k``, ``hpc``, ...). Factories are lazy and cached by the
-underlying modules, so enumerating names costs nothing until a trace is
-actually built.
+Scale-out *families* (``repro.core.sweep.ScaleOutWorkload``) live behind the
+same namespace with a ``scaleout.`` prefix: each maps an instance count to
+the per-GPU trace one instance replays.
+
+* ``scaleout.mlperf.train.<bench>`` — fixed-global-batch data-parallel
+  training (paper Fig 12): per-GPU batch = global / n;
+* ``scaleout.serve.<bench>`` — a fixed offered request batch split across
+  serving instances (strong-scaling latency grids).
+
+``SweepEngine`` resolves any scenario OR scale-out name through
+:func:`resolve`. Suites group scenarios the way the paper's figures do
+(``mlperf.train.large``, ``serve.mlperf``, ``hpc``, ...). Factories are lazy
+and cached by the underlying modules, so enumerating names costs nothing
+until a trace is actually built.
 """
 from __future__ import annotations
 
-from typing import Callable
+from typing import Callable, Union
 
+from repro.core.sweep import ScaleOutWorkload
 from repro.core.trace import Trace
 from repro.workloads import hpc as hpc_mod
 from repro.workloads import lm as lm_mod
 from repro.workloads import mlperf as mlperf_mod
 
 _FACTORIES: dict[str, Callable[[], Trace]] = {}
+_SCALEOUT: dict[str, ScaleOutWorkload] = {}
 _SUITES: dict[str, list[str]] = {}
 
 
@@ -34,6 +50,16 @@ def register(name: str, factory: Callable[[], Trace],
     if name in _FACTORIES:
         raise ValueError(f"scenario {name!r} already registered")
     _FACTORIES[name] = factory
+    for s in suites:
+        _SUITES.setdefault(s, []).append(name)
+
+
+def register_scaleout(name: str, workload: ScaleOutWorkload,
+                      suites: tuple[str, ...] = ()) -> None:
+    """Register one scale-out family under the ``scaleout.`` namespace."""
+    if name in _SCALEOUT:
+        raise ValueError(f"scale-out workload {name!r} already registered")
+    _SCALEOUT[name] = workload
     for s in suites:
         _SUITES.setdefault(s, []).append(name)
 
@@ -49,8 +75,30 @@ def scenario(name: str) -> Trace:
     return factory()
 
 
+def scaleout(name: str) -> ScaleOutWorkload:
+    """The scale-out family for one ``scaleout.*`` name."""
+    try:
+        return _SCALEOUT[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown scale-out workload {name!r}; see "
+            f"repro.workloads.registry.scaleout_names()"
+        ) from None
+
+
+def resolve(name: str) -> Union[Trace, ScaleOutWorkload]:
+    """Scenario trace or scale-out family for a name (engine entry point)."""
+    if name in _SCALEOUT:
+        return _SCALEOUT[name]
+    return scenario(name)
+
+
 def scenarios(prefix: str = "") -> list[str]:
     return [n for n in _FACTORIES if n.startswith(prefix)]
+
+
+def scaleout_names(prefix: str = "") -> list[str]:
+    return [n for n in _SCALEOUT if n.startswith(prefix)]
 
 
 def suites() -> list[str]:
@@ -84,6 +132,26 @@ def _register_mlperf() -> None:
             )
 
 
+# Batched-decode serving grid: requests served per instance at once. Grid
+# points above a benchmark's Table-III large batch (its calibrated maximum —
+# e.g. ssd-large tops out at 6) are NOT registered: those cells would
+# extrapolate outside the paper's measured range.
+SERVE_BATCHES = (1, 4, 16, 64)
+
+
+def _register_serve() -> None:
+    for bench, (_, large) in mlperf_mod.INFER_BATCHES.items():
+        for b in SERVE_BATCHES:
+            if b > large:
+                continue
+            register(
+                f"serve.mlperf.{bench}.b{b}",
+                lambda bench=bench, b=b: mlperf_mod.inference_trace(
+                    bench, "large", batch_override=b),
+                suites=(f"serve.mlperf.{bench}", f"serve.b{b}", "serve.mlperf"),
+            )
+
+
 def _register_lm() -> None:
     from repro.configs import ARCHS, SHAPES
 
@@ -109,6 +177,43 @@ def _register_hpc() -> None:
             idx += 1
 
 
+def _register_scaleout() -> None:
+    # Fig-12 fixed-global-batch data-parallel training: n instances split the
+    # Table-III large batch, so the per-GPU trace shrinks (strong scaling).
+    # trace_for(1) is the plain large-batch scenario object (same lru-cached
+    # trace), so 1-GPU rows are bit-identical to the non-scale-out grid.
+    for bench in mlperf_mod.TRAIN_BATCHES:
+        lb = mlperf_mod.TRAIN_BATCHES[bench][1]
+        register_scaleout(
+            f"scaleout.mlperf.train.{bench}",
+            ScaleOutWorkload(
+                name=f"{bench}.train.large",
+                trace_for=lambda n, bench=bench, lb=lb:
+                    mlperf_mod.training_trace(bench, "large")
+                    if n == 1 else mlperf_mod.training_trace(
+                        bench, "large", batch_override=max(lb // n, 1)),
+            ),
+            suites=("scaleout.mlperf.train",),
+        )
+    # Serving scale-out: a fixed offered batch of requests split across
+    # instances — the latency knob of the serve grid.
+    for bench in mlperf_mod.INFER_BATCHES:
+        lb = mlperf_mod.INFER_BATCHES[bench][1]
+        register_scaleout(
+            f"scaleout.serve.{bench}",
+            ScaleOutWorkload(
+                name=f"{bench}.infer.large",
+                trace_for=lambda n, bench=bench, lb=lb:
+                    mlperf_mod.inference_trace(bench, "large")
+                    if n == 1 else mlperf_mod.inference_trace(
+                        bench, "large", batch_override=max(lb // n, 1)),
+            ),
+            suites=("scaleout.serve",),
+        )
+
+
 _register_mlperf()
+_register_serve()
 _register_lm()
 _register_hpc()
+_register_scaleout()

@@ -77,8 +77,9 @@ def test_checkpoint_reshard_on_restore(tmp_path):
     """Restore onto a different sharding than saved (elastic contract)."""
     from jax.sharding import NamedSharding, PartitionSpec
 
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_compat_mesh
+
+    mesh = make_compat_mesh((1,), ("data",))
     save(str(tmp_path), 1, {"w": jnp.arange(8.0)})
     sh = {"w": NamedSharding(mesh, PartitionSpec("data"))}
     _, out, _ = restore(str(tmp_path), shardings=sh)

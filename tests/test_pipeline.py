@@ -23,9 +23,9 @@ SCRIPT = textwrap.dedent("""
     import jax, jax.numpy as jnp
     import numpy as np
     from repro.distributed.pipeline import pipeline_apply
+    from repro.launch.mesh import make_compat_mesh
 
-    mesh = jax.make_mesh((4,), ("pipe",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_compat_mesh((4,), ("pipe",))
     S, M, MB, D = 4, 8, 2, 16
     key = jax.random.PRNGKey(0)
     w = jax.random.normal(key, (S, D, D)) * 0.3      # one layer per stage

@@ -16,7 +16,13 @@ from repro.core.stackdist import (
     _mattson_pass,
     _reference_mattson_pass,
 )
-from repro.core.sweep import SweepEngine, TraceAnalysis, geomean
+from repro.core.sweep import (
+    ScaleOutWorkload,
+    SweepEngine,
+    TraceAnalysis,
+    geomean,
+    ring_allreduce_time,
+)
 from repro.core.trace import Trace
 from repro.workloads import mlperf, registry
 
@@ -194,6 +200,164 @@ def test_grid_geomean_and_speedups():
     assert abs(grid.geomean_speedup("HBM+L3") - geomean(sp)) < 1e-12
 
 
+# --- batched (config x op) time model vs the per-spec oracle ------------------
+
+def test_time_batch_matches_reference_bit_for_bit(transformer_trace):
+    """The (config x op) matrix evaluation is elementwise per row, so every
+    Table-V config must come out bit-identical to the per-spec scalar loop —
+    under every idealization the attribution peel uses."""
+    import itertools
+
+    ta = TraceAnalysis(transformer_trace)
+    specs = [cfg.build() for cfg in copa.TABLE_V]
+    for flags in itertools.product((False, True), repeat=3):
+        kw = dict(zip(("ideal_dram", "ideal_mem_other", "ideal_occupancy"),
+                      flags))
+        totals = ta.time_batch(specs, **kw)
+        per_op = ta.time_batch(specs, per_op=True, **kw)
+        assert per_op.shape == (len(specs), len(ta.flops))
+        for i, spec in enumerate(specs):
+            assert totals[i] == ta._reference_time(spec, **kw), (flags, spec.name)
+            assert np.array_equal(
+                per_op[i], ta._reference_time(spec, per_op=True, **kw))
+
+
+def test_attribution_batch_matches_single(transformer_trace):
+    ta = TraceAnalysis(transformer_trace)
+    specs = [cfg.build() for cfg in copa.TABLE_V]
+    batched = ta.attribution_batch(specs)
+    for spec, (t_act, segments) in zip(specs, batched):
+        t_one, seg_one = ta.attribution(spec)
+        assert t_act == t_one
+        assert segments == seg_one
+
+
+# --- scale-out projection (paper Fig 12) --------------------------------------
+
+FIG12_BENCHES = ("resnet", "transformer", "ncf")
+
+
+def test_fig12_engine_matches_bespoke_loop_bit_for_bit():
+    """The engine scale-out grid must reproduce the seed's bespoke Fig-12
+    loop exactly: per-trace COPA speedups and fixed-global-batch throughput
+    ratios for 2x/4x GPU-N."""
+    copa_spec = copa.HBML_L3.build()
+    works = [f"scaleout.mlperf.train.{b}" for b in FIG12_BENCHES]
+    names = [registry.scaleout(w).name for w in works]
+    grid = SweepEngine(works, configs=[copa.GPU_N_BASE, copa.HBML_L3],
+                       gpu_counts=(1, 2, 4)).run()
+    for bench, trace_name in zip(FIG12_BENCHES, names):
+        lb = mlperf.TRAIN_BATCHES[bench][1]
+        pm_full = perfmodel.PerfModel(mlperf.training_trace(bench, "large"))
+        t_base = pm_full.time(hw.GPU_N)
+        assert grid.result(trace_name, "HBML+L3").speedup == \
+            t_base / pm_full.time(copa_spec)
+        for n in (2, 4):
+            per_gpu = max(lb // n, 1)
+            pm_n = perfmodel.PerfModel(mlperf.training_trace(
+                bench, "large", batch_override=per_gpu))
+            thr = (per_gpu * n / pm_n.time(hw.GPU_N)) / (lb / t_base)
+            row = grid.result(trace_name, "GPU-N", n)
+            assert row.speedup == thr, (bench, n)
+            assert row.collective_time_s == 0.0  # default fabric is ideal
+            assert row.n_gpus == n
+
+
+def test_weak_scaling_ideal_fabric_is_linear(transformer_trace):
+    """A plain Trace scales out weakly (same per-GPU trace): with an ideal
+    fabric every instance adds full throughput."""
+    grid = SweepEngine([transformer_trace], configs=[copa.GPU_N_BASE],
+                       gpu_counts=(1, 2, 4)).run()
+    r1 = grid.result(transformer_trace.name, "GPU-N", 1)
+    for n in (2, 4):
+        rn = grid.result(transformer_trace.name, "GPU-N", n)
+        assert rn.per_gpu_time_s == r1.per_gpu_time_s
+        assert abs(rn.speedup - n * r1.speedup) < 1e-12 * n
+        assert abs(rn.scaling_efficiency - 1.0) < 1e-12
+        assert abs(rn.throughput - n * r1.throughput) < 1e-6 * rn.throughput
+
+
+def test_finite_ici_charges_training_collectives(transformer_trace):
+    """A finite fabric adds the gradient ring all-reduce to training steps:
+    efficiency drops below 1 and the collective term matches the model."""
+    ici = 300e9
+    grid = SweepEngine([transformer_trace], configs=[copa.GPU_N_BASE],
+                       gpu_counts=(1, 2, 4), ici_bandwidth=ici).run()
+    ta = TraceAnalysis(transformer_trace)
+    assert ta.grad_bytes > 0
+    for n in (2, 4):
+        row = grid.result(transformer_trace.name, "GPU-N", n)
+        want = ring_allreduce_time(ta.grad_bytes, n, ici)
+        assert row.collective_time_s == want
+        assert row.time_s == row.per_gpu_time_s + want
+        assert row.scaling_efficiency < 1.0
+    # one GPU never pays a collective
+    assert grid.result(transformer_trace.name, "GPU-N", 1).collective_time_s == 0.0
+
+
+def test_inference_scaleout_pays_no_collective():
+    t = mlperf.inference_trace("resnet", "large")
+    grid = SweepEngine([t], configs=[copa.GPU_N_BASE], gpu_counts=(1, 4),
+                       ici_bandwidth=100e9).run()
+    row = grid.result(t.name, "GPU-N", 4)
+    assert row.collective_time_s == 0.0
+    assert TraceAnalysis(t).grad_bytes == 0.0
+
+
+def test_instances_to_target():
+    """The paper's 50%-fewer-instances question: how many baseline GPUs
+    match one COPA GPU."""
+    works = ["scaleout.mlperf.train.transformer"]
+    grid = SweepEngine(works, configs=[copa.GPU_N_BASE, copa.HBML_L3],
+                       gpu_counts=(1, 2, 4)).run()
+    name = registry.scaleout(works[0]).name
+    target = grid.result(name, "HBML+L3").speedup
+    assert target > 1.0
+    n = grid.instances_to_target(name, "GPU-N", target)
+    assert n in (2, 4)  # strictly more baseline GPUs than COPA GPUs
+    assert grid.instances_to_target(name, "GPU-N", 1.0) == 1
+    assert grid.instances_to_target(name, "GPU-N", 1e9) is None
+    assert grid.instances_to_match("GPU-N", "HBML+L3", [name]) == {name: n}
+
+
+def test_ring_allreduce_time_model():
+    assert ring_allreduce_time(1e9, 1, 1e9) == 0.0
+    assert ring_allreduce_time(0.0, 4, 1e9) == 0.0
+    assert ring_allreduce_time(1e9, 2, float("inf")) == 0.0
+    # 2(n-1)/n of the payload through the link
+    assert abs(ring_allreduce_time(1e9, 4, 1e9) - 1.5) < 1e-12
+    assert ring_allreduce_time(1e9, 4, 1e9, latency_s=1e-6) > \
+        ring_allreduce_time(1e9, 4, 1e9)
+    # 0 cannot mean both "no link" and "ideal link" — reject it loudly
+    with pytest.raises(ValueError):
+        ring_allreduce_time(1e9, 2, 0.0)
+    with pytest.raises(ValueError):
+        SweepEngine([], ici_bandwidth=0.0)
+    with pytest.raises(ValueError):
+        SweepEngine([], gpu_counts=(0, 2))
+
+
+def test_analysis_cache_refreshes_when_trace_grows():
+    """emit() after a sweep must not serve the stale stream (the process
+    cache keys on op count, not just trace identity)."""
+    from repro.core.sweep import analysis_for
+
+    tr = Trace("grow")
+    tr.emit("op0", 1e6, writes=[("t0", 10 * MB)])
+    assert analysis_for(tr).stream.n_ops == 1
+    tr.emit("op1", 1e6, reads=[("t0", 10 * MB)], writes=[("t1", 10 * MB)])
+    assert analysis_for(tr).stream.n_ops == 2
+
+
+def test_scaleout_workload_wraps_plain_callable():
+    t = mlperf.training_trace("ncf", "small")
+    w = ScaleOutWorkload(name="ncf-family", trace_for=lambda n: t)
+    grid = SweepEngine([w], configs=[copa.GPU_N_BASE]).run()
+    (row,) = grid.rows
+    assert row.trace == "ncf-family"
+    assert row.n_gpus == 1 and row.scaling_efficiency == 1.0
+
+
 # --- registry -----------------------------------------------------------------
 
 def test_registry_enumerates_all_families():
@@ -218,3 +382,52 @@ def test_registry_suites_cover_figures():
     assert len(registry.suite("hpc")) == 130
     lm = registry.suite("lm.decode_32k")
     assert all(n.endswith(".decode_32k") for n in lm)
+
+
+def test_registry_serve_scenarios_batch_grid():
+    names = registry.scenarios("serve.mlperf.")
+    # grid points above a benchmark's calibrated (Table-III large) batch are
+    # not registered — e.g. ssd-large tops out at 6, so no b16/b64 cells
+    want = sum(sum(b <= large for b in registry.SERVE_BATCHES)
+               for _, large in mlperf.INFER_BATCHES.values())
+    assert len(names) == want
+    assert "serve.mlperf.ssd-large.b16" not in names
+    assert "serve.mlperf.ssd-large.b4" in names
+    # every cell is a real trace at its batch, with a distinct row key
+    t4 = registry.scenario("serve.mlperf.resnet.b4")
+    t64 = registry.scenario("serve.mlperf.resnet.b64")
+    assert t4.batch_size == 4 and t64.batch_size == 64
+    assert t4.name != t64.name
+    assert t4.kind == "inference"
+    assert set(registry.suite("serve.b4")) <= set(names)
+
+
+def test_registry_scaleout_families_resolve():
+    names = registry.scaleout_names()
+    assert len(registry.scaleout_names("scaleout.mlperf.train.")) == \
+        len(mlperf.TRAIN_BATCHES)
+    assert len(registry.scaleout_names("scaleout.serve.")) == \
+        len(mlperf.INFER_BATCHES)
+    w = registry.resolve("scaleout.mlperf.train.resnet")
+    assert isinstance(w, ScaleOutWorkload)
+    # n=1 is the plain large-batch scenario object (shared lru cache)...
+    assert w.trace_for(1) is registry.scenario("mlperf.train.resnet.large")
+    # ...and n>1 splits the fixed global batch across instances
+    lb = mlperf.TRAIN_BATCHES["resnet"][1]
+    assert w.trace_for(2).batch_size == lb // 2
+    assert w.trace_for(10_000).batch_size == 1  # never below one sample
+    with pytest.raises(KeyError):
+        registry.scaleout("scaleout.nope")
+    # plain names still resolve to traces
+    assert isinstance(registry.resolve("mlperf.train.resnet.large"), Trace)
+
+
+def test_serve_grid_sweeps_per_msm():
+    """Latency/throughput grid: one engine run per serve batch, per-MSM
+    latency ordering — a bigger on-package L3 never hurts."""
+    names = registry.suite("serve.b64")[:2]
+    grid = SweepEngine(names, configs=[copa.GPU_N_BASE, copa.HBM_L3]).run()
+    for n in names:
+        t = registry.scenario(n).name
+        assert grid.result(t, "HBM+L3").time_s <= \
+            grid.result(t, "GPU-N").time_s * (1 + 1e-9)
