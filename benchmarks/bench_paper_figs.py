@@ -277,6 +277,47 @@ def bench_fig12(csv: Csv):
             f"{out['4x_ici']:.3f} (ring all-reduce @600GB/s)")
 
 
+def bench_serve_slo(csv: Csv):
+    """Fleet-level analogue of Fig 12's instance-count claim: instances of
+    converged GPU-N vs DL-COPA needed to serve a latency-bounded Poisson
+    load (request-level simulator over the engine's serve cost grids).
+
+    The paper's 50%-fewer-instances number is a steady-state throughput
+    ratio; this row reports the SLO-percentile version — how many instances
+    each config needs before p95 TTFT meets a fixed multiple of the
+    full-batch step time, at an offered load of 2.5x one GPU-N's saturated
+    throughput."""
+    from repro.core.sweep import serve_cost_grids
+    from repro.serve.fleet import instances_to_meet_slo
+    from repro.serve.sim import ArrivalSpec, Slo
+
+    def run():
+        out = {}
+        for bench in ("resnet", "gnmt"):
+            grids = serve_cost_grids(bench, [copa.GPU_N_BASE, copa.HBML_L3])
+            base = grids["GPU-N"]
+            slo = Slo(ttft_s=4 * base.step_time(base.max_batch),
+                      percentile=95)
+            arrivals = ArrivalSpec(name=f"slo.{bench}",
+                                   rate=2.5 * base.saturated_rps(),
+                                   n_requests=2048)
+            out[bench] = {
+                name: instances_to_meet_slo(grid, arrivals, slo,
+                                            max_instances=12, seed=0)
+                for name, grid in grids.items()
+            }
+        return out
+
+    out, us = timed(run)
+    for bench, table in out.items():
+        n_base, n_copa = table["GPU-N"], table["HBML+L3"]
+        ratio = (n_base / n_copa) if (n_base and n_copa) else float("nan")
+        csv.add(f"serve_slo.{bench}.instances_gpu_n", us / 4, f"{n_base}")
+        csv.add(f"serve_slo.{bench}.instances_copa", us / 4,
+                f"{n_copa} ({ratio:.2f}x fewer; paper's throughput-only "
+                f"claim: 2x)")
+
+
 def bench_energy(csv: Csv):
     """§III-D: HBM-related energy reduction with a 960MB L3."""
     def run():
@@ -295,4 +336,5 @@ def bench_energy(csv: Csv):
 
 
 ALL = [bench_table1, bench_fig2, bench_fig3, bench_fig4, bench_fig8,
-       bench_fig9, bench_fig10, bench_fig11, bench_fig12, bench_energy]
+       bench_fig9, bench_fig10, bench_fig11, bench_fig12, bench_serve_slo,
+       bench_energy]

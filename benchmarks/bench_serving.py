@@ -1,0 +1,76 @@
+"""Serving-simulator benchmarks: fixed-seed, deterministic smoke rows.
+
+``serving.smoke.*`` pins the request-level simulator's derived numbers (the
+CI smoke step asserts nothing here — determinism means any drift shows up
+as a diff against the recorded derived strings) and times the hot paths:
+cost-grid export, the single-instance event loop at saturation, and the
+fleet SLO scan. ``BENCH_serving.json`` records the us-per-call snapshot.
+"""
+from __future__ import annotations
+
+from benchmarks.common import Csv, timed
+from repro.core import copa
+from repro.core.sweep import SweepEngine, serve_cost_grids
+from repro.serve.fleet import instances_to_meet_slo
+from repro.serve.sim import ArrivalSpec, Request, Slo, simulate
+
+BENCH = "resnet"
+CONFIGS = [copa.GPU_N_BASE, copa.HBM_L3]
+SEED = 0
+
+
+def bench_serving_smoke(csv: Csv):
+    def build():
+        return serve_cost_grids(BENCH, CONFIGS)
+
+    grids, us = timed(build)
+    csv.add("serving.smoke.cost_grid_export", us,
+            f"{len(grids)}cfg x {len(grids['GPU-N'].batches)}batch")
+
+    # closed-loop saturation: simulator vs the engine's serve row
+    g = grids["GPU-N"]
+    eng = SweepEngine([f"serve.mlperf.{BENCH}.b{g.max_batch}"],
+                      configs=[copa.GPU_N_BASE]).run()
+    row = eng.rows[0]
+
+    def saturate():
+        reqs = [Request(rid=i, t_arrival=0.0) for i in range(4 * g.max_batch)]
+        return simulate(reqs, g).metrics
+
+    m, us = timed(saturate)
+    csv.add("serving.smoke.saturation_throughput", us,
+            f"{m.throughput_rps:.1f}r/s (engine row {row.throughput:.1f})")
+
+    # open-loop latency at 0.8x saturation, one instance per config
+    rate = 0.8 * g.saturated_rps()
+    arrivals = ArrivalSpec(name="bench.poisson", rate=rate, n_requests=512)
+
+    def open_loop():
+        out = {}
+        for name, grid in grids.items():
+            out[name] = simulate(arrivals.generate(SEED), grid).metrics
+        return out
+
+    metrics, us = timed(open_loop)
+    for name, m in metrics.items():
+        csv.add(f"serving.smoke.{name}.ttft_p99", us / len(metrics),
+                f"{m.percentile('ttft', 99) * 1e3:.3f}ms")
+
+    # SLO fleet sizing at 2.2x GPU-N saturation (long enough that an
+    # undersized fleet's backlog blows the TTFT tail)
+    slo = Slo(ttft_s=4 * g.step_time(g.max_batch), percentile=95)
+    heavy = ArrivalSpec(name="bench.heavy", rate=2.2 * g.saturated_rps(),
+                        n_requests=2048)
+
+    def size():
+        return {name: instances_to_meet_slo(grid, heavy, slo,
+                                            max_instances=8, seed=SEED)
+                for name, grid in grids.items()}
+
+    sizes, us = timed(size)
+    for name, n in sizes.items():
+        csv.add(f"serving.smoke.{name}.instances_to_meet_slo",
+                us / len(sizes), f"{n} @2.2x sat")
+
+
+ALL = [bench_serving_smoke]

@@ -22,9 +22,11 @@ def main() -> None:
                     help="also write {name: us_per_call} JSON to OUT")
     args = ap.parse_args()
 
-    from benchmarks import bench_core, bench_paper_figs, bench_roofline
+    from benchmarks import bench_core, bench_paper_figs, bench_roofline, \
+        bench_serving
 
-    benches = bench_core.ALL + bench_paper_figs.ALL + bench_roofline.ALL
+    benches = (bench_core.ALL + bench_paper_figs.ALL + bench_roofline.ALL
+               + bench_serving.ALL)
     csv = Csv()
     print("name,us_per_call,derived")
     for fn in benches:

@@ -130,6 +130,29 @@ def recommend(shape_name: str, n_params: float) -> MemoryPolicy:
     return finish(DECODE_MSM)
 
 
+KV_BYTES_PER_ELEM = {"float32": 4, "bfloat16": 2, "float16": 2,
+                     "fp8": 1, "int8": 1}
+
+
+def kv_token_capacity(spec, policy: MemoryPolicy, elems_per_token: int,
+                      reserve_frac: float = 0.30) -> int:
+    """Resident KV tokens one serving instance can hold — the admission
+    bound of the request-level simulator (``repro.serve.sim``).
+
+    Usable DRAM (capacity minus the ``reserve_frac`` set aside for weights
+    and activations) over the per-token KV bytes; the element width comes
+    from the policy's ``kv_cache_dtype``, so an int8-KV MSM holds 2x the
+    tokens of a bf16 one, and a COPA MSM with ``dram_capacity_scale`` > 1
+    holds proportionally more — capacity-driven specialization at the
+    serving layer."""
+    if not 0.0 <= reserve_frac < 1.0:
+        raise ValueError("reserve_frac must be in [0, 1)")
+    if elems_per_token < 1:
+        raise ValueError("elems_per_token must be >= 1")
+    per_token = elems_per_token * KV_BYTES_PER_ELEM[policy.kv_cache_dtype]
+    return int((1.0 - reserve_frac) * spec.dram_capacity // per_token)
+
+
 @dataclass
 class TrafficAnalysis:
     """Fig-4-style sweep for a cell: traffic filtered per on-chip capacity."""

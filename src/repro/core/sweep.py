@@ -142,8 +142,27 @@ def _as_workload(t: WorkloadLike) -> ScaleOutWorkload:
         if isinstance(resolved, ScaleOutWorkload):
             return resolved
         t = resolved
+    if not isinstance(t, Trace):
+        raise TypeError(
+            f"not a sweepable workload: {t!r} (expected Trace, scenario "
+            f"name, or ScaleOutWorkload — arrival specs drive "
+            f"repro.serve.sim, not the sweep engine)")
     trace = t
     return ScaleOutWorkload(name=trace.name, trace_for=lambda n: trace)
+
+
+def _expand_workloads(traces: Iterable[WorkloadLike]) -> list[ScaleOutWorkload]:
+    """Resolve every workload; glob-pattern strings expand through the
+    registry to every matching scenario/scale-out name."""
+    out: list[ScaleOutWorkload] = []
+    for t in traces:
+        if isinstance(t, str) and any(ch in t for ch in "*?["):
+            from repro.workloads import registry  # lazy
+
+            out.extend(_as_workload(r) for r in registry.resolve(t))
+        else:
+            out.append(_as_workload(t))
+    return out
 
 
 class TraceAnalysis:
@@ -536,6 +555,132 @@ class SweepGrid:
                 for t in names}
 
 
+# -- step-cost export for the request-level serving simulator -----------------
+
+#: Resident-KV bucket edges (tokens) for serving cost grids.
+DEFAULT_SEQ_EDGES = (4096, 16384, 65536, 262144, 1048576)
+
+
+@dataclass(frozen=True)
+class CostGrid:
+    """Precomputed (batch, resident-KV-bucket) step times for ONE config.
+
+    The serving simulator (``repro.serve.sim``) charges every engine
+    iteration one cell of this grid: ``step_time(batch, resident_tokens)``
+    rounds the batch UP to the next priced bucket and the resident-token
+    count UP to the next ``seq_edges`` bucket (conservative within a
+    bucket; counts past the last edge use the last bucket). Lookups are
+    vectorized — arrays in, arrays out.
+    """
+
+    config: str
+    batches: tuple[int, ...]          # ascending priced batch sizes
+    seq_edges: tuple[float, ...]      # ascending resident-token bucket edges
+    step_time_s: np.ndarray           # (len(batches), len(seq_edges)) seconds
+    prefill_s_per_token: float = 0.0
+
+    def __post_init__(self):
+        if list(self.batches) != sorted(set(self.batches)) or not self.batches:
+            raise ValueError("batches must be non-empty, ascending, unique")
+        if list(self.seq_edges) != sorted(set(self.seq_edges)):
+            raise ValueError("seq_edges must be ascending and unique")
+        if self.step_time_s.shape != (len(self.batches), len(self.seq_edges)):
+            raise ValueError("step_time_s shape mismatch")
+
+    @property
+    def max_batch(self) -> int:
+        return self.batches[-1]
+
+    def step_time(self, batch, resident_tokens=0):
+        b = np.asarray(batch)
+        if np.any(b < 1) or np.any(b > self.max_batch):
+            raise ValueError(
+                f"batch outside priced range [1, {self.max_batch}]: {batch!r}")
+        i = np.searchsorted(self.batches, b, side="left")
+        j = np.minimum(np.searchsorted(self.seq_edges, np.asarray(resident_tokens),
+                                       side="left"),
+                       len(self.seq_edges) - 1)
+        out = self.step_time_s[i, j]
+        return float(out) if np.ndim(batch) == 0 and np.ndim(resident_tokens) == 0 \
+            else out
+
+    def prefill_time(self, prompt_tokens):
+        return np.asarray(prompt_tokens) * self.prefill_s_per_token \
+            if np.ndim(prompt_tokens) else prompt_tokens * self.prefill_s_per_token
+
+    def saturated_rps(self, output_tokens: int = 1) -> float:
+        """Steady-state requests/s at a permanently full batch with empty-KV
+        step costs — the closed-loop ceiling the saturation tests pin against
+        the ``SweepEngine`` serve rows."""
+        return self.max_batch / (self.step_time_s[-1, 0] * output_tokens)
+
+
+def _kv_step_time(spec: GpuSpec, kv_bytes: float) -> float:
+    """Per-iteration KV sweep time: the whole resident cache is read once.
+    A cache that fits the LLC is served at on-package bandwidth (the COPA
+    L3/UHB link, or L2 for monolithic specs) — the 'shorter decode steps'
+    mechanism; otherwise it streams from DRAM."""
+    if kv_bytes <= 0:
+        return 0.0
+    if kv_bytes <= spec.llc_capacity:
+        bw = spec.l3_bandwidth if spec.l3_capacity else spec.l2_bandwidth
+    else:
+        bw = spec.dram_bandwidth
+    return kv_bytes / bw
+
+
+def serve_cost_grids(
+    bench: str,
+    configs: Sequence[ConfigLike],
+    *,
+    kv_bytes_per_token: float = 0.0,
+    seq_edges: Sequence[float] = DEFAULT_SEQ_EDGES,
+    prefill_s_per_token: float = 0.0,
+    tokens_per_pass: int = 1,
+    scenario_prefix: str = "serve.mlperf",
+) -> dict[str, CostGrid]:
+    """Export (batch x KV-bucket) step-time grids for every config, priced
+    from the registry's ``serve.<bench>.b<batch>`` scenarios.
+
+    One ``TraceAnalysis.time_batch`` call per batch bucket covers ALL
+    configs, so grid construction is (config x batch) batched exactly like
+    the sweep engine. ``tokens_per_pass`` divides the trace time for
+    scenarios whose one pass decodes several tokens (e.g. gnmt's 50-step
+    decoder), yielding a per-output-token step cost. With
+    ``kv_bytes_per_token`` zero (the one-shot MLPerf semantics) the grid has
+    a single KV bucket and step times equal the engine's serve-row times
+    bit-for-bit."""
+    from repro.workloads import registry  # lazy: workloads sit above core
+
+    names = registry.scenarios(f"{scenario_prefix}.{bench}.b")
+    if not names:
+        raise KeyError(f"no {scenario_prefix}.{bench}.b* scenarios registered")
+    by_batch = sorted((int(n.rsplit(".b", 1)[1]), n) for n in names)
+    batches = tuple(b for b, _ in by_batch)
+    specs = [(_config_name(c), _as_spec(c)) for c in configs]
+    spec_objs = [s for _, s in specs]
+    base = np.empty((len(batches), len(specs)))
+    for k, (_, scen) in enumerate(by_batch):
+        base[k] = analysis_for(registry.scenario(scen)).time_batch(spec_objs)
+    base /= max(int(tokens_per_pass), 1)
+
+    edges = tuple(float(e) for e in seq_edges) if kv_bytes_per_token > 0 \
+        else (float("inf"),)
+    out = {}
+    for ci, (name, spec) in enumerate(specs):
+        kv = np.array([_kv_step_time(spec, e * kv_bytes_per_token)
+                       for e in edges]) if kv_bytes_per_token > 0 \
+            else np.zeros(1)
+        out[name] = CostGrid(
+            config=name,
+            batches=batches,
+            seq_edges=edges,
+            step_time_s=base[:, ci][:, None] + kv[None, :],
+            prefill_s_per_token=float(prefill_s_per_token),
+        )
+    return out
+
+
 class SweepEngine:
     """One batched pipeline over (traces x configs x LLC capacities x GPUs).
 
@@ -565,7 +710,7 @@ class SweepEngine:
         ici_bandwidth: float = float("inf"),
         ici_latency_s: float = 0.0,
     ):
-        self.workloads = [_as_workload(t) for t in traces]
+        self.workloads = _expand_workloads(traces)
         self.configs = list(configs if configs is not None else copa_mod.TABLE_V)
         self.baseline = baseline if baseline is not None else copa_mod.GPU_N_BASE
         self.extra_llc_capacities = [float(c) for c in extra_llc_capacities]

@@ -1,4 +1,5 @@
 from repro.ft.watchdog import StepWatchdog, StragglerStats
-from repro.ft.elastic import ElasticRunner, RunState
+from repro.ft.elastic import ElasticRunner, QueueDepthAutoscaler, RunState
 
-__all__ = ["StepWatchdog", "StragglerStats", "ElasticRunner", "RunState"]
+__all__ = ["StepWatchdog", "StragglerStats", "ElasticRunner",
+           "QueueDepthAutoscaler", "RunState"]

@@ -35,6 +35,53 @@ class RunState:
     restarts: int = 0
 
 
+@dataclass
+class QueueDepthAutoscaler:
+    """Queue-depth-driven fleet sizing for the serving simulator.
+
+    The serving-side face of elastic run control: where :class:`ElasticRunner`
+    resizes a training mesh across restarts, this policy resizes a serving
+    fleet (``repro.serve.fleet.FleetSim``) at a fixed cadence from what a
+    real autoscaler can observe — queue depth and running batch occupancy.
+
+    Thresholds are in units of FULL BATCHES per instance — a loaded-but-
+    stable instance naturally runs with a batch or two waiting, so absolute
+    request counts would flap at the correct size:
+
+    * scale UP by one when more than ``high_batches`` full batches per
+      instance are waiting AND the backlog is not already draining (an
+      undersized fleet has an ever-growing queue; a recovering one should
+      not keep adding instances);
+    * scale DOWN by one when the queue is near-empty (< ``low_batches``)
+      and the running work would fit ``n - 1`` instances at ``down_util``
+      batch utilization.
+
+    Under stationary load this converges to the smallest stable fleet —
+    within one instance of ``instances_to_meet_slo`` for any SLO loose
+    enough to be queue-stability-bound (asserted in tests).
+    """
+
+    high_batches: float = 2.0
+    low_batches: float = 0.25
+    down_util: float = 0.7
+    min_instances: int = 1
+    max_instances: int = 64
+    _last_queued: float = field(default=-1.0, init=False, repr=False)
+
+    def decide(self, n_active: int, queued: int, running: int,
+               max_batch: int) -> int:
+        capacity = max(n_active, 1) * max_batch
+        growing = self._last_queued < 0 or queued >= self._last_queued
+        self._last_queued = float(queued)
+        if queued > self.high_batches * capacity and growing:
+            return min(n_active + 1, self.max_instances)
+        if (queued < self.low_batches * capacity
+                and n_active > self.min_instances
+                and running <= (n_active - 1) * max_batch * self.down_util):
+            return max(n_active - 1, self.min_instances)
+        return n_active
+
+
 class ElasticRunner:
     def __init__(self, ckpt_dir: str, mesh_factory: Callable[[], object],
                  build_state: Callable, train_segment: Callable,

@@ -6,6 +6,13 @@
 Demonstrates the serving substrate: KV-cache allocation + sharding,
 prefill-via-decode warmup, batched greedy/sampled decode with per-request
 stop handling, and simple continuous-batching slot reuse.
+
+``--sim`` switches to the analytic request-level simulator instead of the
+jax model: Poisson arrivals against one simulated instance per COPA config
+of an MLPerf serving scenario (``--bench``), reporting latency percentiles
+and SLO goodput (see ``repro.serve.sim`` / ``repro.serve.fleet``):
+
+    PYTHONPATH=src python -m repro.launch.serve --sim --bench resnet
 """
 from __future__ import annotations
 
@@ -60,6 +67,33 @@ class ServingEngine:
         return np.concatenate(out, axis=1)
 
 
+def sim_main(args):
+    """Analytic serving simulation of one MLPerf bench across COPA configs."""
+    from repro.core import copa
+    from repro.core.sweep import serve_cost_grids
+    from repro.serve.fleet import latency_goodput_rows
+    from repro.serve.sim import ArrivalSpec, Slo
+
+    cfgs = [copa.TABLE_V_BY_NAME[n] for n in args.sim_configs.split(",")]
+    grids = serve_cost_grids(args.bench, cfgs)
+    base = next(iter(grids.values()))
+    sat = base.saturated_rps()
+    rates = [f * sat for f in (0.5, 0.8, 1.1)]
+    arrivals = ArrivalSpec(name=f"launch.{args.bench}", rate=sat,
+                           n_requests=args.requests)
+    slo = Slo(ttft_s=4 * base.step_time(base.max_batch), percentile=95)
+    rows = latency_goodput_rows(grids, arrivals, rates, slo,
+                                n_instances=args.instances, seed=0)
+    print(f"{args.bench}: {args.instances} instance(s)/config, "
+          f"SLO p95 TTFT<={slo.ttft_s*1e3:.2f}ms")
+    for r in rows:
+        print(f"{r['config']:<12} rate={r['rate_rps']:>9.1f}/s "
+              f"ttft p50/p99 {r['ttft_p50_ms']:.2f}/{r['ttft_p99_ms']:.2f}ms "
+              f"goodput {r['goodput_rps']:.1f}/s "
+              f"{'ok' if r['slo_met'] else 'SLO MISS'}")
+    return rows
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tinyllama-1.1b-smoke")
@@ -67,7 +101,20 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--sim", action="store_true",
+                    help="run the analytic request-level simulator instead "
+                         "of the jax model")
+    ap.add_argument("--bench", default="resnet",
+                    help="[--sim] MLPerf serving bench (serve.mlperf.<bench>)")
+    ap.add_argument("--sim-configs", default="GPU-N,HBM+L3",
+                    help="[--sim] comma-separated Table-V config names")
+    ap.add_argument("--instances", type=int, default=1,
+                    help="[--sim] fleet size per config")
+    ap.add_argument("--requests", type=int, default=2000)
     args = ap.parse_args(argv)
+
+    if args.sim:
+        return sim_main(args)
 
     cfg = configs.get(args.arch)
     mesh = make_host_mesh()

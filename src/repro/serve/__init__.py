@@ -1,3 +1,16 @@
-from repro.serve.step import make_decode_step, make_prefill_step
+"""Serving: jax prefill/decode steps + the request-level simulator.
+
+``repro.serve.sim`` / ``repro.serve.fleet`` are pure-NumPy and import
+cheaply; the jax step builders load lazily so simulator users never pay the
+jax import.
+"""
 
 __all__ = ["make_decode_step", "make_prefill_step"]
+
+
+def __getattr__(name):
+    if name in __all__:
+        from repro.serve import step
+
+        return getattr(step, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

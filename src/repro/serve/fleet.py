@@ -1,0 +1,245 @@
+"""Fleet-level serving: N simulated instances behind a router.
+
+Answers the paper's scale-out question at the request level: how many
+instances of a COPA config does a latency-bounded service need?
+:class:`FleetSim` runs one global discrete-event loop over N
+:class:`~repro.serve.sim.Instance` states — arrivals are dispatched by a
+router (``round_robin`` or ``least_loaded``), each instance schedules its
+own continuous-batching iterations, and an optional autoscaler (queue-depth
+policy from ``repro.ft.elastic``) resizes the fleet at a fixed cadence.
+
+:func:`instances_to_meet_slo` is the SLO-percentile analogue of
+``SweepGrid.instances_to_target``: the smallest fleet whose simulated
+latency percentiles meet the :class:`~repro.serve.sim.Slo`.
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+from typing import Sequence
+
+from repro.serve.sim import (
+    ArrivalSpec,
+    Instance,
+    Request,
+    SimMetrics,
+    Slo,
+    StepLog,
+    fresh_requests,
+)
+
+ROUTERS = ("round_robin", "least_loaded")
+
+
+@dataclass
+class ScaleEvent:
+    t: float
+    n_active: int
+    queued: int
+    running: int
+
+
+@dataclass
+class FleetResult:
+    requests: list[Request]
+    metrics: SimMetrics
+    step_logs: list[StepLog]          # one per instance ever active
+    n_instances_final: int            # active (non-draining) at completion
+    scale_events: list[ScaleEvent] = field(default_factory=list)
+
+    @property
+    def n_instances_peak(self) -> int:
+        return max((e.n_active for e in self.scale_events),
+                   default=self.n_instances_final)
+
+
+_ARRIVAL, _STEP_DONE, _TICK = 0, 1, 2
+
+
+class FleetSim:
+    """N serving instances of one config behind a router.
+
+    All instances share one cost model (``CostGrid``-like) and per-instance
+    ``max_batch`` / ``kv_capacity_tokens`` limits. With an ``autoscaler``
+    (see :class:`repro.ft.elastic.QueueDepthAutoscaler`) the fleet is
+    resized every ``autoscale_interval_s``: scale-up adds a fresh instance;
+    scale-down drains the least-loaded one (it stops receiving arrivals,
+    finishes its queue, then leaves the fleet)."""
+
+    def __init__(self, cost, n_instances: int = 1, *,
+                 router: str = "least_loaded",
+                 max_batch: int | None = None,
+                 kv_capacity_tokens: float = float("inf"),
+                 autoscaler=None, autoscale_interval_s: float = 0.0):
+        if router not in ROUTERS:
+            raise ValueError(f"unknown router {router!r}; one of {ROUTERS}")
+        if n_instances < 1:
+            raise ValueError("n_instances must be >= 1")
+        if autoscaler is not None and autoscale_interval_s <= 0:
+            raise ValueError("autoscaler needs autoscale_interval_s > 0")
+        self.cost = cost
+        self.router = router
+        self.max_batch = max_batch
+        self.kv_capacity_tokens = kv_capacity_tokens
+        self.autoscaler = autoscaler
+        self.autoscale_interval_s = float(autoscale_interval_s)
+        self._active: list[Instance] = []
+        self._draining: list[Instance] = []
+        self._retired: list[Instance] = []
+        for _ in range(n_instances):
+            self._spawn()
+        self._rr = 0
+
+    # -- fleet membership ------------------------------------------------------
+    def _spawn(self) -> Instance:
+        inst = Instance(self.cost, max_batch=self.max_batch,
+                        kv_capacity_tokens=self.kv_capacity_tokens)
+        self._active.append(inst)
+        return inst
+
+    def _drain_one(self) -> None:
+        if len(self._active) <= 1:
+            return
+        inst = min(self._active, key=lambda i: i.load)
+        self._active.remove(inst)
+        (self._retired if inst.idle else self._draining).append(inst)
+
+    def _route(self, req: Request) -> Instance:
+        if self.router == "round_robin":
+            inst = self._active[self._rr % len(self._active)]
+            self._rr += 1
+            return inst
+        return min(self._active, key=lambda i: i.load)
+
+    # -- the global event loop -------------------------------------------------
+    def run(self, requests: Sequence[Request] | ArrivalSpec,
+            seed: int = 0) -> FleetResult:
+        if isinstance(requests, ArrivalSpec):
+            requests = requests.generate(seed)
+        # copy: a shared request list (replayed trace) must not carry one
+        # run's timing state into the next (scan_fleet reuses the list)
+        reqs = fresh_requests(requests)
+        events: list[tuple[float, int, int, object]] = []
+        seq = 0
+        for r in reqs:
+            heapq.heappush(events, (r.t_arrival, seq, _ARRIVAL, r))
+            seq += 1
+        scale_events: list[ScaleEvent] = []
+        if self.autoscaler is not None and reqs:
+            heapq.heappush(events, (reqs[0].t_arrival
+                                    + self.autoscale_interval_s, seq, _TICK,
+                                    None))
+            seq += 1
+        done = 0
+        clock = 0.0
+        while events and done < len(reqs):
+            t, _, kind, payload = heapq.heappop(events)
+            assert t >= clock, "fleet clock went backwards"
+            clock = t
+            # Drain every event at this timestamp before starting iterations
+            # (simultaneous arrivals share a batch — see repro.serve.sim).
+            kick: dict[int, Instance] = {}
+            while True:
+                if kind == _ARRIVAL:
+                    inst = self._route(payload)
+                    inst.submit(payload)
+                    kick[id(inst)] = inst
+                elif kind == _STEP_DONE:
+                    inst = payload
+                    done += len(inst.finish_step(t))
+                    if inst in self._draining and inst.idle:
+                        self._draining.remove(inst)
+                        self._retired.append(inst)
+                    else:
+                        kick[id(inst)] = inst
+                else:  # autoscale tick
+                    queued = sum(len(i.waiting) for i in self._active)
+                    running = sum(len(i.running) for i in self._active)
+                    target = self.autoscaler.decide(
+                        len(self._active), queued, running,
+                        self.max_batch or self.cost.max_batch)
+                    while len(self._active) < target:
+                        self._spawn()
+                    while len(self._active) > max(target, 1):
+                        self._drain_one()
+                    scale_events.append(ScaleEvent(t, len(self._active),
+                                                   queued, running))
+                    if done < len(reqs):
+                        heapq.heappush(events, (t + self.autoscale_interval_s,
+                                                seq, _TICK, None))
+                        seq += 1
+                if not (events and events[0][0] == t):
+                    break
+                _, _, kind, payload = heapq.heappop(events)
+            for inst in kick.values():
+                if not inst.busy:
+                    t_end = inst.start_step(t)
+                    if t_end is not None:
+                        heapq.heappush(events, (t_end, seq, _STEP_DONE, inst))
+                        seq += 1
+        leftovers = sum(i.load for i in
+                        self._active + self._draining + self._retired)
+        assert done == len(reqs) and leftovers == 0, "requests left in system"
+        logs = [i.step_log() for i in
+                self._active + self._draining + self._retired]
+        return FleetResult(
+            requests=reqs,
+            metrics=SimMetrics.from_requests(reqs),
+            step_logs=logs,
+            n_instances_final=len(self._active),
+            scale_events=scale_events,
+        )
+
+
+def scan_fleet(cost, arrivals: ArrivalSpec | Sequence[Request], slo: Slo, *,
+               router: str = "least_loaded", max_batch: int | None = None,
+               kv_capacity_tokens: float = float("inf"),
+               max_instances: int = 64, seed: int = 0
+               ) -> dict[int, SimMetrics]:
+    """Simulate fleets of 1..N instances until the SLO is met (or the cap is
+    hit); returns metrics per fleet size tried."""
+    out: dict[int, SimMetrics] = {}
+    for n in range(1, max_instances + 1):
+        sim = FleetSim(cost, n, router=router, max_batch=max_batch,
+                       kv_capacity_tokens=kv_capacity_tokens)
+        out[n] = sim.run(arrivals, seed=seed).metrics
+        if slo.met(out[n]):
+            break
+    return out
+
+
+def instances_to_meet_slo(cost, arrivals: ArrivalSpec | Sequence[Request],
+                          slo: Slo, **kw) -> int | None:
+    """Smallest fleet size whose simulated percentiles meet ``slo`` (None
+    when even ``max_instances`` falls short) — the SLO analogue of
+    ``SweepGrid.instances_to_target``."""
+    scanned = scan_fleet(cost, arrivals, slo, **kw)
+    n = max(scanned)
+    return n if slo.met(scanned[n]) else None
+
+
+def latency_goodput_rows(grids: dict[str, "object"], arrivals: ArrivalSpec,
+                         rates: Sequence[float], slo: Slo, *,
+                         n_instances: int = 1, router: str = "least_loaded",
+                         kv_capacity_tokens: float = float("inf"),
+                         seed: int = 0) -> list[dict]:
+    """Comparison-table rows (config x arrival rate): latency percentiles +
+    SLO goodput, shared by the examples / launch drivers / benchmarks."""
+    rows = []
+    for rate in rates:
+        spec = arrivals.with_rate(rate)
+        for name, grid in grids.items():
+            m = FleetSim(grid, n_instances, router=router,
+                         kv_capacity_tokens=kv_capacity_tokens).run(
+                             spec, seed=seed).metrics
+            rows.append({
+                "config": name,
+                "rate_rps": rate,
+                "ttft_p50_ms": 1e3 * m.percentile("ttft", 50),
+                "ttft_p99_ms": 1e3 * m.percentile("ttft", 99),
+                "tpot_p99_ms": 1e3 * m.percentile("tpot", 99),
+                "e2e_p99_ms": 1e3 * m.percentile("e2e", 99),
+                "goodput_rps": m.goodput_rps(slo),
+                "slo_met": slo.met(m),
+            })
+    return rows

@@ -1,0 +1,470 @@
+"""Request-level serving simulator: continuous batching over analytic costs.
+
+The sweep engine prices one *step* of a serving workload (a batched decode
+iteration of a ``serve.*`` scenario) per COPA config. This module turns those
+step costs into what a latency-bounded service actually sees: open-loop
+arrivals queue at an instance, a continuous-batching scheduler admits them
+into the running batch at step boundaries (bounded by ``max_batch`` and KV
+residency), and every completed request carries TTFT / TPOT / E2E timings.
+
+Layering:
+
+* :class:`Request` / :class:`ArrivalSpec` — open-loop arrival processes
+  (Poisson, deterministically-modulated bursts, replayed traces) with
+  configurable prompt/output length distributions. Everything is seeded and
+  deterministic.
+* :class:`Instance` — ONE serving instance's scheduler state (FIFO waiting
+  queue, running batch, KV reservation). Step costs come from any object
+  with the :class:`~repro.core.sweep.CostGrid` interface: ``max_batch``,
+  ``step_time(batch, resident_tokens)``, ``prefill_time(prompt_tokens)``.
+* :func:`simulate` — the single-instance discrete-event loop (heap of
+  arrival/step-completion events). ``repro.serve.fleet`` layers N instances
+  behind a router on the same :class:`Instance` mechanics.
+* :func:`_reference_sim` — closed-form single-request oracle the event loop
+  is tested against, matching the codebase's engine/oracle pattern.
+
+Scheduling model (one engine iteration):
+
+* at a step boundary the instance admits waiting requests FIFO while the
+  batch has a slot and the request's full KV residency (prompt + output
+  tokens) fits the ``kv_capacity_tokens`` budget — reservation is
+  conservative, so admitted work never has to be evicted mid-flight;
+* the iteration interleaves prefill and decode: its duration is the decode
+  step cost at the (batch, resident-KV) grid cell plus the prefill cost of
+  every request admitted this step;
+* every running request emits one token per iteration; the first token of a
+  request is produced by the iteration that prefilled it (TTFT = queue wait
+  + prefill + one decode step).
+"""
+from __future__ import annotations
+
+import heapq
+import math
+from collections import deque
+from dataclasses import dataclass, field, replace
+from typing import Iterable, Sequence
+
+import numpy as np
+
+NAN = float("nan")
+
+
+@dataclass
+class Request:
+    """One serving request. ``output_tokens`` engine iterations complete it;
+    the paper-style one-shot scenarios (an MLPerf inference sample) are the
+    ``prompt_tokens=0, output_tokens=1`` special case."""
+
+    rid: int
+    t_arrival: float
+    prompt_tokens: int = 0
+    output_tokens: int = 1
+    # -- filled in by the simulator -------------------------------------------
+    t_admitted: float = NAN
+    t_first_token: float = NAN
+    t_done: float = NAN
+    tokens_emitted: int = 0
+
+    def __post_init__(self):
+        if self.output_tokens < 1:
+            raise ValueError("output_tokens must be >= 1")
+        if self.prompt_tokens < 0 or self.t_arrival < 0:
+            raise ValueError("prompt_tokens/t_arrival must be >= 0")
+
+    @property
+    def kv_tokens(self) -> int:
+        """Peak KV residency this request reserves at admission."""
+        return self.prompt_tokens + self.output_tokens
+
+
+# -- length distributions ------------------------------------------------------
+
+@dataclass(frozen=True)
+class LengthDist:
+    """Token-length distribution: ``fixed`` (mean), ``uniform`` [low, high],
+    or ``lognormal`` (mean, sigma of the underlying normal). Samples are
+    clipped to >= ``floor``."""
+
+    kind: str = "fixed"
+    mean: float = 1.0
+    low: int = 1
+    high: int = 1
+    sigma: float = 0.5
+    floor: int = 0
+
+    def sample(self, rng: np.random.Generator, n: int) -> np.ndarray:
+        if self.kind == "fixed":
+            out = np.full(n, int(round(self.mean)))
+        elif self.kind == "uniform":
+            out = rng.integers(self.low, self.high + 1, n)
+        elif self.kind == "lognormal":
+            mu = math.log(max(self.mean, 1e-9)) - 0.5 * self.sigma ** 2
+            out = np.rint(rng.lognormal(mu, self.sigma, n)).astype(np.int64)
+        else:
+            raise ValueError(f"unknown length distribution {self.kind!r}")
+        return np.maximum(out.astype(np.int64), self.floor)
+
+
+ONE_SHOT_PROMPT = LengthDist("fixed", mean=0, floor=0)
+ONE_SHOT_OUTPUT = LengthDist("fixed", mean=1, floor=1)
+
+
+@dataclass(frozen=True)
+class ArrivalSpec:
+    """An open-loop arrival process: ``generate(seed)`` materializes a
+    deterministic request list.
+
+    ``burst_factor``/``burst_fraction``/``period_s`` modulate a Poisson
+    process: within each period the first ``burst_fraction`` runs at
+    ``burst_factor`` x the off-phase rate, with the off-phase rate chosen so
+    the long-run mean stays ``rate``. The default is a plain (homogeneous)
+    Poisson process."""
+
+    name: str
+    rate: float                       # mean requests/s
+    n_requests: int
+    prompt: LengthDist = ONE_SHOT_PROMPT
+    output: LengthDist = ONE_SHOT_OUTPUT
+    burst_factor: float = 1.0
+    burst_fraction: float = 0.0
+    period_s: float = 0.0
+
+    def with_rate(self, rate: float) -> "ArrivalSpec":
+        return replace(self, rate=float(rate))
+
+    def _thin_keep(self, t: np.ndarray, peak: float) -> np.ndarray:
+        """Instantaneous rate at time ``t`` as a fraction of ``peak``."""
+        frac, bf = self.burst_fraction, self.burst_factor
+        # off-phase rate keeping the long-run mean at self.rate
+        r_off = self.rate / (frac * bf + (1.0 - frac))
+        r_on = bf * r_off
+        phase = np.mod(t, self.period_s) / self.period_s
+        return np.where(phase < frac, r_on, r_off) / peak
+
+    def generate(self, seed: int = 0) -> list[Request]:
+        rng = np.random.default_rng(seed)
+        n = self.n_requests
+        bursty = self.burst_fraction > 0 and self.burst_factor != 1.0 \
+            and self.period_s > 0
+        if not bursty:
+            times = np.cumsum(rng.exponential(1.0 / self.rate, n))
+        else:
+            # Thinning (Lewis-Shedler): draw at the peak rate, keep with
+            # probability rate(t)/peak — exact for piecewise-constant rates.
+            frac, bf = self.burst_fraction, self.burst_factor
+            peak = bf * self.rate / (frac * bf + (1.0 - frac))
+            times_l, t, kept = [], 0.0, 0
+            while kept < n:
+                block = max(n - kept, 64) * 2
+                gaps = rng.exponential(1.0 / peak, block)
+                cand = t + np.cumsum(gaps)
+                keep = rng.random(block) < self._thin_keep(cand, peak)
+                sel = cand[keep][: n - kept]
+                times_l.append(sel)
+                kept += len(sel)
+                t = float(cand[-1])
+            times = np.concatenate(times_l)
+        prompts = self.prompt.sample(rng, n)
+        outputs = self.output.sample(rng, n)
+        return [Request(rid=i, t_arrival=float(times[i]),
+                        prompt_tokens=int(prompts[i]),
+                        output_tokens=int(outputs[i]))
+                for i in range(n)]
+
+
+def replay(times: Sequence[float], prompts: Sequence[int] | int = 0,
+           outputs: Sequence[int] | int = 1) -> list[Request]:
+    """Requests from an explicit arrival-time trace (replayed workload)."""
+    n = len(times)
+    p = [prompts] * n if isinstance(prompts, int) else list(prompts)
+    o = [outputs] * n if isinstance(outputs, int) else list(outputs)
+    order = np.argsort(np.asarray(times, dtype=float), kind="stable")
+    return [Request(rid=int(i), t_arrival=float(times[i]),
+                    prompt_tokens=int(p[i]), output_tokens=int(o[i]))
+            for i in order]
+
+
+# -- instance mechanics --------------------------------------------------------
+
+@dataclass
+class StepLog:
+    """Per-iteration schedule record (numpy views over the run)."""
+
+    t_start: np.ndarray
+    t_end: np.ndarray
+    batch: np.ndarray
+    kv_reserved: np.ndarray
+    queued: np.ndarray       # waiting-queue depth after admission
+    admitted: np.ndarray
+
+    @classmethod
+    def from_rows(cls, rows: list[tuple]) -> "StepLog":
+        cols = np.array(rows, dtype=float).reshape(-1, 6).T
+        return cls(t_start=cols[0], t_end=cols[1],
+                   batch=cols[2].astype(int), kv_reserved=cols[3],
+                   queued=cols[4].astype(int), admitted=cols[5].astype(int))
+
+
+class Instance:
+    """One serving instance: FIFO admission into a continuous batch.
+
+    The event loop (here or in ``repro.serve.fleet``) drives it with
+    ``submit`` at arrival events and ``finish_step`` at step completions;
+    ``start_step`` returns the completion time to schedule (or None when
+    idle). ``load`` is what routers and the autoscaler observe."""
+
+    def __init__(self, cost, max_batch: int | None = None,
+                 kv_capacity_tokens: float = float("inf")):
+        self.cost = cost
+        self.max_batch = int(max_batch if max_batch is not None
+                             else cost.max_batch)
+        if self.max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self.kv_capacity_tokens = float(kv_capacity_tokens)
+        self.waiting: deque[Request] = deque()
+        self.running: list[Request] = []
+        self.kv_reserved = 0.0
+        self.busy = False
+        self._log_rows: list[tuple] = []
+
+    @property
+    def load(self) -> int:
+        return len(self.waiting) + len(self.running)
+
+    @property
+    def idle(self) -> bool:
+        return not self.busy and self.load == 0
+
+    def submit(self, req: Request) -> None:
+        if req.kv_tokens > self.kv_capacity_tokens:
+            raise ValueError(
+                f"request {req.rid} needs {req.kv_tokens} KV tokens; instance "
+                f"capacity is {self.kv_capacity_tokens:.0f} — it can never be "
+                f"admitted")
+        self.waiting.append(req)
+
+    def _admit(self, now: float) -> int:
+        admitted = 0
+        while self.waiting and len(self.running) < self.max_batch:
+            req = self.waiting[0]
+            if self.kv_reserved + req.kv_tokens > self.kv_capacity_tokens:
+                break  # FIFO: no skipping past the blocked head
+            self.waiting.popleft()
+            req.t_admitted = now
+            self.kv_reserved += req.kv_tokens
+            self.running.append(req)
+            admitted += 1
+        return admitted
+
+    def start_step(self, now: float) -> float | None:
+        """Admit + begin one iteration; returns its completion time, or
+        None when there is nothing to run."""
+        if self.busy:
+            raise RuntimeError("instance already mid-step")
+        admitted = self._admit(now)
+        if not self.running:
+            return None
+        prefill = sum(self.cost.prefill_time(r.prompt_tokens)
+                      for r in self.running[-admitted:]) if admitted else 0.0
+        resident = sum(r.prompt_tokens + r.tokens_emitted
+                       for r in self.running)
+        dt = self.cost.step_time(len(self.running), resident) + prefill
+        if not (dt > 0 and math.isfinite(dt)):
+            raise ValueError(f"non-positive/non-finite step time {dt!r}")
+        t_end = now + dt
+        self._log_rows.append((now, t_end, len(self.running),
+                               self.kv_reserved, len(self.waiting), admitted))
+        self.busy = True
+        return t_end
+
+    def finish_step(self, now: float) -> list[Request]:
+        """Emit one token per running request; complete + release finished
+        ones. Returns the completions."""
+        if not self.busy:
+            raise RuntimeError("no step in flight")
+        self.busy = False
+        done: list[Request] = []
+        still: list[Request] = []
+        for r in self.running:
+            r.tokens_emitted += 1
+            if r.tokens_emitted == 1:
+                r.t_first_token = now
+            if r.tokens_emitted >= r.output_tokens:
+                r.t_done = now
+                self.kv_reserved -= r.kv_tokens
+                done.append(r)
+            else:
+                still.append(r)
+        self.running = still
+        return done
+
+    def step_log(self) -> StepLog:
+        return StepLog.from_rows(self._log_rows)
+
+
+# -- metrics / SLO -------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Slo:
+    """A latency SLO: the ``percentile`` of each finite target must be met.
+    Per-request, TPOT is ignored for single-token requests (no inter-token
+    gap exists)."""
+
+    ttft_s: float = float("inf")
+    tpot_s: float = float("inf")
+    e2e_s: float = float("inf")
+    percentile: float = 99.0
+
+    def met(self, m: "SimMetrics") -> bool:
+        if len(m.ttft) == 0:
+            return True
+        p = self.percentile
+        return (np.percentile(m.ttft, p) <= self.ttft_s
+                and np.percentile(m.tpot, p) <= self.tpot_s
+                and np.percentile(m.e2e, p) <= self.e2e_s)
+
+    def ok_mask(self, m: "SimMetrics") -> np.ndarray:
+        multi = m.output_tokens > 1
+        return ((m.ttft <= self.ttft_s)
+                & (np.where(multi, m.tpot, 0.0) <= self.tpot_s)
+                & (m.e2e <= self.e2e_s))
+
+
+@dataclass
+class SimMetrics:
+    """Vectorized per-request timings for one simulation."""
+
+    ttft: np.ndarray
+    tpot: np.ndarray            # 0 for single-token requests
+    e2e: np.ndarray
+    output_tokens: np.ndarray
+    t_first_arrival: float
+    t_last_done: float
+
+    @classmethod
+    def from_requests(cls, requests: Sequence[Request]) -> "SimMetrics":
+        if not requests:
+            z = np.zeros(0)
+            return cls(z, z, z, z.astype(int), 0.0, 0.0)
+        arr = np.array([(r.t_arrival, r.t_first_token, r.t_done,
+                         r.output_tokens) for r in requests])
+        t_arr, t_first, t_done, out = arr.T
+        if np.isnan(t_done).any():
+            raise ValueError("metrics over an incomplete simulation")
+        gaps = np.maximum(out - 1, 1)
+        return cls(
+            ttft=t_first - t_arr,
+            tpot=np.where(out > 1, (t_done - t_first) / gaps, 0.0),
+            e2e=t_done - t_arr,
+            output_tokens=out.astype(int),
+            t_first_arrival=float(t_arr.min()),
+            t_last_done=float(t_done.max()),
+        )
+
+    @property
+    def makespan_s(self) -> float:
+        return max(self.t_last_done - self.t_first_arrival, 1e-12)
+
+    @property
+    def throughput_rps(self) -> float:
+        return len(self.ttft) / self.makespan_s
+
+    @property
+    def throughput_tokens(self) -> float:
+        return float(self.output_tokens.sum()) / self.makespan_s
+
+    def percentile(self, metric: str, p: float) -> float:
+        xs = getattr(self, metric)
+        return float(np.percentile(xs, p)) if len(xs) else 0.0
+
+    def goodput_rps(self, slo: Slo) -> float:
+        """SLO-constrained goodput: requests/s whose individual TTFT/TPOT/E2E
+        all met the targets."""
+        if len(self.ttft) == 0:
+            return 0.0
+        return float(slo.ok_mask(self).sum()) / self.makespan_s
+
+
+@dataclass
+class SimResult:
+    requests: list[Request]
+    metrics: SimMetrics
+    step_log: StepLog
+
+
+# -- the single-instance event loop --------------------------------------------
+
+_ARRIVAL, _STEP_DONE = 0, 1
+
+
+def fresh_requests(requests: Iterable[Request]) -> list[Request]:
+    """Pristine copies of a request list, arrival-sorted. Simulations fill
+    timing state into their requests, so a shared list (a replayed trace
+    scanned over several fleet sizes) must be re-materialized per run —
+    without this, run 2 would see run 1's tokens as already emitted."""
+    return sorted((replace(r, t_admitted=NAN, t_first_token=NAN, t_done=NAN,
+                           tokens_emitted=0) for r in requests),
+                  key=lambda r: (r.t_arrival, r.rid))
+
+
+def simulate(requests: Iterable[Request], cost, *,
+             max_batch: int | None = None,
+             kv_capacity_tokens: float = float("inf")) -> SimResult:
+    """Run one instance over an open-loop arrival stream to completion.
+
+    A heap-ordered discrete-event loop: arrival events enqueue into the
+    instance; step-completion events emit tokens and immediately start the
+    next iteration while work remains. Deterministic given the request list
+    (which is copied, so one list can drive many runs).
+    """
+    reqs = fresh_requests(requests)
+    inst = Instance(cost, max_batch=max_batch,
+                    kv_capacity_tokens=kv_capacity_tokens)
+    events: list[tuple[float, int, int]] = []  # (time, seq, kind)
+    seq = 0
+    for r in reqs:
+        heapq.heappush(events, (r.t_arrival, seq, _ARRIVAL))
+        seq += 1
+    next_arrival = 0  # index into reqs, in heap-push order
+    clock = 0.0
+    while events:
+        t, _, kind = heapq.heappop(events)
+        assert t >= clock, "simulation clock went backwards"
+        clock = t
+        # Drain EVERY event at this timestamp before starting an iteration:
+        # simultaneous arrivals must all be admissible into the same batch
+        # (saturation at arrival-rate -> inf fills whole batches).
+        while True:
+            if kind == _ARRIVAL:
+                inst.submit(reqs[next_arrival])
+                next_arrival += 1
+            else:
+                inst.finish_step(t)
+            if not (events and events[0][0] == t):
+                break
+            _, _, kind = heapq.heappop(events)
+        if not inst.busy:
+            t_end = inst.start_step(t)
+            if t_end is not None:
+                heapq.heappush(events, (t_end, seq, _STEP_DONE))
+                seq += 1
+    assert not inst.waiting and not inst.running, "requests left in system"
+    return SimResult(requests=reqs,
+                     metrics=SimMetrics.from_requests(reqs),
+                     step_log=inst.step_log())
+
+
+def _reference_sim(req: Request, cost) -> tuple[float, float]:
+    """Closed-form (t_first_token, t_done) for ONE request on an idle
+    instance — the oracle the event loop must reproduce exactly.
+
+    The request is admitted at arrival; iteration k (0-based) runs at batch 1
+    with ``prompt + k`` resident tokens; the first iteration also pays the
+    prefill."""
+    t = req.t_arrival + cost.prefill_time(req.prompt_tokens)
+    t_first = NAN
+    for k in range(req.output_tokens):
+        t += cost.step_time(1, req.prompt_tokens + k)
+        if k == 0:
+            t_first = t
+    return t_first, t

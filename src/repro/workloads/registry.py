@@ -23,14 +23,21 @@ the per-GPU trace one instance replays.
 * ``scaleout.serve.<bench>`` — a fixed offered request batch split across
   serving instances (strong-scaling latency grids).
 
+Arrival processes for the request-level serving simulator
+(``repro.serve.sim``) live under ``arrivals.*`` — named open-loop request
+streams (steady Poisson, burst-modulated) that :func:`resolve` returns as
+``ArrivalSpec`` objects.
+
 ``SweepEngine`` resolves any scenario OR scale-out name through
-:func:`resolve`. Suites group scenarios the way the paper's figures do
-(``mlperf.train.large``, ``serve.mlperf``, ``hpc``, ...). Factories are lazy
-and cached by the underlying modules, so enumerating names costs nothing
-until a trace is actually built.
+:func:`resolve`; glob patterns (``serve.mlperf.*``, ``arrivals.poisson.*``)
+resolve to every matching name. Suites group scenarios the way the paper's
+figures do (``mlperf.train.large``, ``serve.mlperf``, ``hpc``, ...).
+Factories are lazy and cached by the underlying modules, so enumerating
+names costs nothing until a trace is actually built.
 """
 from __future__ import annotations
 
+from fnmatch import fnmatchcase
 from typing import Callable, Union
 
 from repro.core.sweep import ScaleOutWorkload
@@ -41,7 +48,9 @@ from repro.workloads import mlperf as mlperf_mod
 
 _FACTORIES: dict[str, Callable[[], Trace]] = {}
 _SCALEOUT: dict[str, ScaleOutWorkload] = {}
+_ARRIVALS: dict[str, Callable[[], object]] = {}  # -> repro.serve.sim.ArrivalSpec
 _SUITES: dict[str, list[str]] = {}
+_GLOB_CHARS = "*?["
 
 
 def register(name: str, factory: Callable[[], Trace],
@@ -86,11 +95,57 @@ def scaleout(name: str) -> ScaleOutWorkload:
         ) from None
 
 
-def resolve(name: str) -> Union[Trace, ScaleOutWorkload]:
-    """Scenario trace or scale-out family for a name (engine entry point)."""
+def register_arrivals(name: str, factory: Callable[[], object],
+                      suites: tuple[str, ...] = ()) -> None:
+    """Register one named arrival process (``arrivals.*`` namespace) for the
+    request-level serving simulator; factories return
+    :class:`repro.serve.sim.ArrivalSpec` objects lazily."""
+    if name in _ARRIVALS:
+        raise ValueError(f"arrival process {name!r} already registered")
+    _ARRIVALS[name] = factory
+    for s in suites:
+        _SUITES.setdefault(s, []).append(name)
+
+
+def arrivals(name: str):
+    """The :class:`~repro.serve.sim.ArrivalSpec` for one ``arrivals.*`` name."""
+    try:
+        return _ARRIVALS[name]()
+    except KeyError:
+        raise KeyError(
+            f"unknown arrival process {name!r}; see "
+            f"repro.workloads.registry.arrival_names()"
+        ) from None
+
+
+def resolve(name: str):
+    """Resolve a name to its registered object — a scenario ``Trace``, a
+    ``ScaleOutWorkload`` family, or an ``ArrivalSpec``.
+
+    Glob patterns (fnmatch: ``*?[``) resolve to the LIST of every matching
+    name across all three namespaces, in registration order — e.g.
+    ``resolve("serve.mlperf.resnet.*")`` or ``resolve("arrivals.poisson.*")``
+    — raising ``KeyError`` when nothing matches."""
+    if any(ch in name for ch in _GLOB_CHARS):
+        hits = match(name)
+        if not hits:
+            raise KeyError(f"no registered name matches pattern {name!r}")
+        return [resolve(n) for n in hits]
     if name in _SCALEOUT:
         return _SCALEOUT[name]
+    if name in _ARRIVALS:
+        return _ARRIVALS[name]()
     return scenario(name)
+
+
+def names() -> list[str]:
+    """Every registered name across all namespaces, registration order."""
+    return [*_FACTORIES, *_SCALEOUT, *_ARRIVALS]
+
+
+def match(pattern: str) -> list[str]:
+    """Registered names matching an fnmatch pattern (registration order)."""
+    return [n for n in names() if fnmatchcase(n, pattern)]
 
 
 def scenarios(prefix: str = "") -> list[str]:
@@ -99,6 +154,10 @@ def scenarios(prefix: str = "") -> list[str]:
 
 def scaleout_names(prefix: str = "") -> list[str]:
     return [n for n in _SCALEOUT if n.startswith(prefix)]
+
+
+def arrival_names(prefix: str = "") -> list[str]:
+    return [n for n in _ARRIVALS if n.startswith(prefix)]
 
 
 def suites() -> list[str]:
@@ -111,7 +170,18 @@ def suite(name: str) -> list[str]:
 
 
 def suite_traces(name: str) -> list[Trace]:
-    return [scenario(n) for n in suite(name)]
+    """Traces of a suite's members. Suites may also group scale-out
+    families and arrival processes — those have no single trace, so asking
+    for their traces is an error, not a silent skip."""
+    out = []
+    for n in suite(name):
+        obj = resolve(n)
+        if not isinstance(obj, Trace):
+            raise TypeError(
+                f"suite {name!r} member {n!r} is a {type(obj).__name__}, "
+                f"not a scenario trace; resolve() it directly")
+        out.append(obj)
+    return out
 
 
 # --- built-in population ------------------------------------------------------
@@ -212,8 +282,40 @@ def _register_scaleout() -> None:
         )
 
 
+# Open-loop arrival processes for the request-level serving simulator
+# (repro.serve.sim): steady Poisson and 4x-burst-modulated Poisson at a
+# log-spaced rate ladder, one-shot request semantics (prompt 0 / output 1 —
+# the MLPerf serving scenarios). Factories import the sim module lazily so
+# enumerating names stays import-light.
+ARRIVAL_RATES = (4, 16, 64, 256, 1024)
+
+
+def _register_arrivals() -> None:
+    def poisson(rate: int):
+        from repro.serve.sim import ArrivalSpec
+
+        return ArrivalSpec(name=f"arrivals.poisson.r{rate}", rate=float(rate),
+                           n_requests=512)
+
+    def burst(rate: int):
+        from repro.serve.sim import ArrivalSpec
+
+        return ArrivalSpec(name=f"arrivals.burst.r{rate}.x4", rate=float(rate),
+                           n_requests=512, burst_factor=4.0,
+                           burst_fraction=0.25, period_s=64.0 / rate)
+
+    for rate in ARRIVAL_RATES:
+        register_arrivals(f"arrivals.poisson.r{rate}",
+                          lambda rate=rate: poisson(rate),
+                          suites=("arrivals.poisson", "arrivals"))
+        register_arrivals(f"arrivals.burst.r{rate}.x4",
+                          lambda rate=rate: burst(rate),
+                          suites=("arrivals.burst", "arrivals"))
+
+
 _register_mlperf()
 _register_serve()
 _register_lm()
 _register_hpc()
 _register_scaleout()
+_register_arrivals()

@@ -1,0 +1,87 @@
+"""Hypothesis property tests for the serving-simulator event core:
+request conservation, a non-decreasing clock, and the batch-size /
+KV-capacity admission invariants, over randomized arrival streams, grids,
+and fleet shapes."""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sweep import CostGrid
+from repro.serve.fleet import FleetSim
+from repro.serve.sim import Request, simulate
+
+INF = float("inf")
+
+requests_st = st.lists(
+    st.tuples(
+        st.floats(min_value=0.0, max_value=0.05, allow_nan=False),
+        st.integers(min_value=0, max_value=20),   # prompt tokens
+        st.integers(min_value=1, max_value=5),    # output tokens
+    ),
+    min_size=1, max_size=40,
+)
+
+grid_st = st.tuples(
+    st.floats(min_value=1e-4, max_value=1e-2),    # flat step seconds
+    st.sampled_from([(1,), (1, 2, 4), (1, 8)]),   # priced batch buckets
+    st.floats(min_value=0.0, max_value=1e-3),     # prefill s/token
+)
+
+# capacity always admits the largest possible single request (25 KV tokens)
+kv_cap_st = st.one_of(st.just(INF), st.integers(min_value=25, max_value=120))
+
+
+def _build(reqs, grid):
+    step, batches, prefill = grid
+    cost = CostGrid("prop", batches, (INF,),
+                    np.full((len(batches), 1), step),
+                    prefill_s_per_token=prefill)
+    return [Request(rid=i, t_arrival=t, prompt_tokens=p, output_tokens=o)
+            for i, (t, p, o) in enumerate(reqs)], cost
+
+
+@settings(max_examples=60, deadline=None)
+@given(reqs=requests_st, grid=grid_st, kv_cap=kv_cap_st)
+def test_event_core_invariants(reqs, grid, kv_cap):
+    reqs, cost = _build(reqs, grid)
+    res = simulate(reqs, cost, kv_capacity_tokens=kv_cap)
+
+    # conservation: every request completes exactly its output tokens,
+    # causally ordered
+    assert len(res.requests) == len(reqs)
+    for r in res.requests:
+        assert r.tokens_emitted == r.output_tokens
+        assert r.t_arrival <= r.t_admitted
+        assert r.t_admitted < r.t_first_token <= r.t_done
+
+    log = res.step_log
+    assert log.admitted.sum() == len(reqs)
+
+    # non-decreasing clock: iterations are sequential and positive-length
+    assert (log.t_end > log.t_start).all()
+    assert (np.diff(log.t_start) >= 0).all()
+    assert (log.t_start[1:] >= log.t_end[:-1] - 1e-12).all()
+
+    # admission invariants: never over the batch bound, never over KV
+    assert (log.batch >= 1).all()
+    assert (log.batch <= cost.max_batch).all()
+    assert (log.kv_reserved <= kv_cap + 1e-9).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(reqs=requests_st, grid=grid_st,
+       n_instances=st.integers(min_value=1, max_value=4),
+       router=st.sampled_from(["round_robin", "least_loaded"]))
+def test_fleet_invariants(reqs, grid, n_instances, router):
+    reqs, cost = _build(reqs, grid)
+    res = FleetSim(cost, n_instances, router=router).run(reqs)
+    for r in res.requests:
+        assert r.tokens_emitted == r.output_tokens
+        assert r.t_arrival <= r.t_admitted < r.t_first_token <= r.t_done
+    assert sum(log.admitted.sum() for log in res.step_logs) == len(reqs)
+    for log in res.step_logs:
+        if len(log.batch):
+            assert (log.batch <= cost.max_batch).all()
+            assert (log.t_start[1:] >= log.t_end[:-1] - 1e-12).all()
