@@ -1,6 +1,6 @@
 """Core-engine benchmarks: vectorized kernels vs the per-touch references.
 
-Three levels, mirroring the engine's layering:
+Four levels, mirroring the engine's layering:
 
 * ``core.mattson.*``   — stack-distance kernel on one real touch stream;
 * ``core.traffic.*``   — capacity-batched traffic kernel, Table-V capacities;
@@ -8,26 +8,44 @@ Three levels, mirroring the engine's layering:
   (Table V x all four MLPerf suites): the batched ``SweepEngine`` vs the
   seed-style path (reference Fenwick Mattson + per-touch dirty-state
   recurrence, traffic simulated per (trace, capacity-set) as the old
-  ``PerfModel._traffic_cache`` did). The ratio row is the PR's acceptance
+  ``PerfModel._traffic_cache`` did). The ratio row is the PR-1 acceptance
   number (>= 10x).
+* ``core.suite.*``     — the suite-level StreamBatch pass: the whole
+  Fig-11 + Fig-12 + serve-grid evaluation (Table V x MLPerf suites x
+  scale-out families x serve scenarios x {1,2,4} GPUs + every serve cost
+  grid) through ONE ``SuiteAnalysis`` vs the per-trace loop it replaced
+  (streams, analyses, traffic and time model all rebuilt per trace, as the
+  pre-StreamBatch engine did). The ratio row is the suite-batching
+  acceptance number (>= 3x); rows are asserted bit-identical.
 
-Both paths share the vectorized bottleneck time model (the seed's was
-already per-op NumPy), so the comparison isolates exactly what this PR
-vectorized.
+All paths share the vectorized bottleneck time model (the seed's was
+already per-op NumPy), so each comparison isolates one batching layer.
 """
 from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
 
 from benchmarks.common import Csv, suite_scenarios, timed
 from repro.core import copa
 from repro.core.cachesim import (
+    _STREAMS,
     _reference_traffic_below,
     build_stream,
     traffic_below,
 )
 from repro.core.stackdist import _mattson_pass, _reference_mattson_pass
-from repro.core.sweep import SweepEngine, TraceAnalysis, _as_spec
+from repro.core.sweep import (
+    SweepEngine,
+    TraceAnalysis,
+    _as_spec,
+    serve_cost_grids,
+    suite_analysis_for,
+)
+from repro.core.sweep import _SUITES as _SUITE_CACHE
 from repro.core.hw import MB
-from repro.workloads import mlperf
+from repro.workloads import mlperf, registry
 from repro.workloads.registry import scenario
 
 TABLE_V_CAPS = [60 * MB, 60 * MB + 960 * MB, 60 * MB + 1920 * MB, float(1 << 50)]
@@ -153,4 +171,88 @@ def bench_timemodel(csv: Csv):
             f"max rel diff {worst:.1e}")
 
 
-ALL = [bench_core, bench_timemodel]
+def _suite_works() -> list[str]:
+    """The end-to-end benchmark suite: Fig 11 (all four MLPerf suites),
+    Fig 12 (fixed-global-batch scale-out families), and the serve grid."""
+    return (_fig11_scenarios()
+            + registry.scaleout_names("scaleout.mlperf.train.")
+            + registry.scenarios("serve.mlperf."))
+
+
+def _per_trace_cost_grids(bench: str, configs) -> np.ndarray:
+    """The pre-StreamBatch serve-grid pricing loop: one fresh analysis and
+    one ``time_batch`` per batch scenario."""
+    names = registry.scenarios(f"serve.mlperf.{bench}.b")
+    by_batch = sorted((int(n.rsplit(".b", 1)[1]), n) for n in names)
+    spec_objs = [_as_spec(c) for c in configs]
+    base = np.empty((len(by_batch), len(spec_objs)))
+    for k, (_, scen) in enumerate(by_batch):
+        base[k] = TraceAnalysis(registry.scenario(scen)).time_batch(spec_objs)
+    return base
+
+
+def bench_core_suite(csv: Csv):
+    """Suite-level batching: Fig-11 + Fig-12 + serve grids, one StreamBatch
+    pass vs the per-trace loop. Acceptance: >= 3x, rows bit-identical."""
+    works = _suite_works()
+    kw = dict(configs=copa.TABLE_V, gpu_counts=(1, 2, 4))
+
+    def batched():
+        # The shipped path: one SuiteAnalysis pass per engine run; stream/
+        # suite caches shared across runs (steady-state cost of repeated
+        # full-suite sweeps — the first build is the core.suite.build row).
+        grid = SweepEngine(works, **kw).run()
+        for b in mlperf.INFER_BATCHES:
+            serve_cost_grids(b, copa.TABLE_V)
+        return grid
+
+    def per_trace():
+        # The pre-StreamBatch engine: no stream cache existed, every run
+        # flattened + Mattson'd + simulated + costed one trace at a time.
+        _STREAMS.clear()
+        grid = SweepEngine(works, share_analyses=False, **kw).run(batched=False)
+        for b in mlperf.INFER_BATCHES:
+            _per_trace_cost_grids(b, copa.TABLE_V)
+        return grid
+
+    grid_b, us_b = timed_min(batched)
+    grid_p, us_p = timed_min(per_trace)
+    identical = len(grid_b.rows) == len(grid_p.rows) and all(
+        dataclasses.asdict(rb) == dataclasses.asdict(rp)
+        for rb, rp in zip(grid_b.rows, grid_p.rows)
+    )
+    csv.add("core.suite.batched", us_b,
+            f"{len(grid_b.rows)} grid rows + {len(mlperf.INFER_BATCHES)} "
+            f"serve grids, one SuiteAnalysis pass")
+    csv.add("core.suite.per_trace", us_p,
+            "pre-StreamBatch loop: per-trace streams/traffic/time")
+    csv.add("core.suite.speedup", 0.0,
+            f"{us_p / max(us_b, 1e-9):.1f}x faster (acceptance >= 3x; "
+            f"rows bit-identical: {identical})")
+
+    # One-time suite construction from cold: batched flatten + Mattson +
+    # padding for every distinct trace the suite touches.
+    traces = [t for w in SweepEngine(works, **kw).workloads
+              for t in (w.trace_for(1), w.trace_for(2), w.trace_for(4))]
+    uniq = list({id(t): t for t in traces}.values())
+
+    def build_cold():
+        _STREAMS.clear()
+        _SUITE_CACHE.clear()
+        return suite_analysis_for(uniq)
+
+    _, us_build = timed(build_cold)
+    csv.add("core.suite.build", us_build,
+            f"cold batched stream+pad build, {len(uniq)} traces")
+
+    # Full-registry one-call sweep: every scenario namespace at once.
+    def registry_sweep():
+        return SweepEngine(registry.scenarios(), configs=copa.TABLE_V).run()
+
+    grid_r, us_reg = timed_min(registry_sweep)
+    csv.add("core.suite.registry", us_reg,
+            f"{len(grid_r.rows)} rows: all {len(registry.scenarios())} "
+            f"registry scenarios x Table V in one pass")
+
+
+ALL = [bench_core, bench_timemodel, bench_core_suite]

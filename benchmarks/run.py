@@ -17,10 +17,13 @@ from benchmarks.common import Csv
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None,
+                    help="comma-separated substrings; run benches whose "
+                         "function name matches any (e.g. fig11,core_suite)")
     ap.add_argument("--json", default=None, metavar="OUT",
                     help="also write {name: us_per_call} JSON to OUT")
     args = ap.parse_args()
+    only = args.only.split(",") if args.only else None
 
     from benchmarks import bench_core, bench_paper_figs, bench_roofline, \
         bench_serving
@@ -30,7 +33,7 @@ def main() -> None:
     csv = Csv()
     print("name,us_per_call,derived")
     for fn in benches:
-        if args.only and args.only not in fn.__name__:
+        if only and not any(tok in fn.__name__ for tok in only):
             continue
         try:
             fn(csv)

@@ -36,10 +36,12 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
+    # Prefill priced per config from a real prefill-chunk trace (the
+    # lm.*.prefill_* cells) instead of a flat s/token knob.
     grids = serve_cost_grids(
         "gnmt", CONFIGS, tokens_per_pass=50,
         kv_bytes_per_token=KV_BYTES_PER_TOKEN,
-        prefill_s_per_token=2e-7,
+        prefill_scenario="lm.tinyllama-1.1b.prefill_32k",
     )
     base = grids["GPU-N"]
     out_mean = 48

@@ -21,15 +21,25 @@ evicting op is not identifiable at this granularity).
 Steady state: the paper simulates one end-to-end iteration of workloads that
 run for thousands of iterations, so cold misses are amortized; we double the
 trace and read statistics off the second copy (``cyclic=True``).
+
+Suite batching: :class:`StreamBatch` pads many traces' touch streams into
+``(n_traces, max_len)`` tensors and runs the same scans over the batch axis
+(bit-identical per row to the per-trace kernels), which is what lets
+``repro.core.sweep.SuiteAnalysis`` evaluate a whole scenario registry in a
+single trace x config x capacity pass; :func:`build_streams` builds many
+streams with one batched Mattson call, and streams are memoized
+process-wide.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Iterable, Sequence
 
 import numpy as np
 
 from repro.core.hw import GpuSpec
-from repro.core.stackdist import _mattson_pass
+from repro.core.stackdist import PAD_ID, _mattson_pass, _mattson_pass_batch
 from repro.core.trace import Trace
 
 
@@ -105,15 +115,12 @@ def _assign_buffers(trace: Trace) -> dict[str, str]:
     return mapping
 
 
-def build_stream(trace: Trace, cyclic: bool = True, reuse_buffers: bool = True,
-                 dist_fn=_mattson_pass) -> TouchStream:
-    """Tensors whose name starts with ``in.`` are *streaming*: fresh data
-    arrives every iteration (input batches, labels), so consecutive
-    iterations never reuse them — they get one tensor identity per iteration
-    copy instead of wrapping around. Transient tensors share recycled buffer
-    identities (see :func:`_assign_buffers`). ``dist_fn`` selects the Mattson
-    implementation (the per-touch reference is used by parity/benchmark
-    paths)."""
+def _flatten_trace(trace: Trace, cyclic: bool, reuse_buffers: bool):
+    """The capacity- and distance-independent part of :func:`build_stream`:
+    flatten, buffer-recycle, double, and densify one trace's touches.
+    Returns ``(op_idx, dense_tensor_ids, sizes, is_write, n_tensors,
+    second_half)`` — everything a :class:`TouchStream` needs except the
+    reuse distances."""
     mapping = _assign_buffers(trace) if reuse_buffers else {}
     op_idx, tids, sizes, is_write = [], [], [], []
     intern: dict[str, int] = {}
@@ -146,17 +153,125 @@ def build_stream(trace: Trace, cyclic: bool = True, reuse_buffers: bool = True,
         _, dense = np.unique(tids, return_inverse=True)
     else:
         dense = tids
-    dist = dist_fn(dense, sizes) if n else np.zeros(0)
-    return TouchStream(
+    n_tensors = int(dense.max()) + 1 if n else 0
+    return op_idx, dense, sizes, is_write, n_tensors, (n if cyclic else 0)
+
+
+# Process-wide stream cache: streams are pure functions of the trace (keyed
+# by identity + op count like sweep._ANALYSES), and flattening them is
+# Python-loop bound, so repeated sweeps over registry traces should never
+# re-pay it. Bounded LRU; only default-kernel streams are cached (reference
+# dist_fn calls from parity tests/benchmarks always rebuild).
+_STREAMS: OrderedDict[tuple[int, int, bool, bool], tuple[Trace, TouchStream]] = OrderedDict()
+_STREAMS_MAX = 512
+
+
+def _stream_cache_get(trace: Trace, cyclic: bool, reuse_buffers: bool) -> TouchStream | None:
+    key = (id(trace), len(trace.ops), cyclic, reuse_buffers)
+    hit = _STREAMS.get(key)
+    if hit is not None and hit[0] is trace:
+        _STREAMS.move_to_end(key)
+        return hit[1]
+    return None
+
+
+def _stream_cache_put(trace: Trace, cyclic: bool, reuse_buffers: bool,
+                      stream: TouchStream) -> None:
+    _STREAMS[(id(trace), len(trace.ops), cyclic, reuse_buffers)] = (trace, stream)
+    if len(_STREAMS) > _STREAMS_MAX:
+        _STREAMS.popitem(last=False)
+
+
+def build_stream(trace: Trace, cyclic: bool = True, reuse_buffers: bool = True,
+                 dist_fn=_mattson_pass) -> TouchStream:
+    """Tensors whose name starts with ``in.`` are *streaming*: fresh data
+    arrives every iteration (input batches, labels), so consecutive
+    iterations never reuse them — they get one tensor identity per iteration
+    copy instead of wrapping around. Transient tensors share recycled buffer
+    identities (see :func:`_assign_buffers`). ``dist_fn`` selects the Mattson
+    implementation (the per-touch reference is used by parity/benchmark
+    paths)."""
+    default_kernel = dist_fn is _mattson_pass
+    if default_kernel:
+        hit = _stream_cache_get(trace, cyclic, reuse_buffers)
+        if hit is not None:
+            return hit
+    op_idx, dense, sizes, is_write, n_tensors, second_half = _flatten_trace(
+        trace, cyclic, reuse_buffers
+    )
+    dist = dist_fn(dense, sizes) if len(op_idx) else np.zeros(0)
+    stream = TouchStream(
         n_ops=len(trace.ops),
         op_idx=op_idx,
         sizes=sizes,
         is_write=is_write,
         dist=dist,
         tensor_idx=dense,
-        n_tensors=int(dense.max()) + 1 if n else 0,
-        second_half=n if cyclic else 0,
+        n_tensors=n_tensors,
+        second_half=second_half,
     )
+    if default_kernel:
+        _stream_cache_put(trace, cyclic, reuse_buffers, stream)
+    return stream
+
+
+#: Streams at or below this (doubled) length run the batched Mattson kernel;
+#: longer ones are work-dominated and the per-stream kernel is faster.
+_BATCH_MATTSON_MAX_LEN = 1024
+
+
+def build_streams(traces: Sequence[Trace], cyclic: bool = True,
+                  reuse_buffers: bool = True) -> list[TouchStream]:
+    """Build every trace's :class:`TouchStream` with ONE batched Mattson
+    pass over all short streams (grouped into padded pow2-width blocks;
+    long streams keep the per-stream kernel, which is faster once the merge
+    levels are work-dominated). Row results are bit-identical to
+    :func:`build_stream` per trace — both land in the shared stream cache.
+    """
+    out: list[TouchStream | None] = [None] * len(traces)
+    flat: dict[int, tuple] = {}
+    for i, trace in enumerate(traces):
+        hit = _stream_cache_get(trace, cyclic, reuse_buffers)
+        if hit is not None:
+            out[i] = hit
+        else:
+            flat[i] = _flatten_trace(trace, cyclic, reuse_buffers)
+    # Group the short streams into pow2-width blocks for the batched kernel.
+    blocks: dict[int, list[int]] = {}
+    for i, (op_idx, dense, sizes, *_rest) in flat.items():
+        n = len(op_idx)
+        if 0 < n <= _BATCH_MATTSON_MAX_LEN:
+            width = 1 << max(int(np.ceil(np.log2(n))), 0)
+            blocks.setdefault(width, []).append(i)
+    dists: dict[int, np.ndarray] = {}
+    for width, members in blocks.items():
+        ids2 = np.full((len(members), width), PAD_ID, dtype=np.int64)
+        sz2 = np.zeros((len(members), width))
+        for r, i in enumerate(members):
+            _, dense, sizes, *_ = flat[i]
+            ids2[r, : len(dense)] = dense
+            sz2[r, : len(dense)] = sizes
+        dist2 = _mattson_pass_batch(ids2, sz2)
+        for r, i in enumerate(members):
+            dists[i] = dist2[r, : len(flat[i][1])].copy()
+    for i, (op_idx, dense, sizes, is_write, n_tensors, second_half) in flat.items():
+        if i in dists:
+            dist = dists[i]
+        else:
+            dist = _mattson_pass(dense, sizes) if len(op_idx) else np.zeros(0)
+        stream = TouchStream(
+            n_ops=len(traces[i].ops),
+            op_idx=op_idx,
+            sizes=sizes,
+            is_write=is_write,
+            dist=dist,
+            tensor_idx=dense,
+            n_tensors=n_tensors,
+            second_half=second_half,
+        )
+        _stream_cache_put(traces[i], cyclic, reuse_buffers, stream)
+        out[i] = stream
+    return out
 
 
 @dataclass
@@ -302,6 +417,255 @@ def traffic_below(stream: TouchStream, capacities: list[float]) -> list[LevelTra
     return [LevelTraffic(fills[i], wbs[i]) for i in range(ncap)]
 
 
+#: A block absorbs shorter streams down to this fraction of its width;
+#: padding waste inside a block is bounded by 1/_BLOCK_FILL.
+_BLOCK_FILL = 0.75
+
+#: Row x width bound per block (keeps the (R, L, ncap) temporaries small).
+_BLOCK_SLOTS = 1 << 20
+
+
+@dataclass
+class _PaddedBlock:
+    """One same-width row block of a :class:`StreamBatch`, stored in
+    tensor-sorted order with every capacity-independent quantity of the
+    :func:`traffic_below` scan precomputed: the segment structure (chain
+    starts, last writes) reduced to the recorded touches, and the scatter
+    indices. A traffic call only runs the capacity-dependent residency and
+    dirty math."""
+
+    members: list[int]              # stream indices, same order as rows
+    sizes: np.ndarray               # (R, L) float64, tensor-sorted, pads 0
+    dist: np.ndarray                # (R, L) float64, pads +inf
+    is_write: np.ndarray            # (R, L) bool, pads False
+    is_inf: np.ndarray              # (R, L) bool: +inf distance
+    # -- recorded (steady-state) touches, flattened --------------------------
+    rec_rows: np.ndarray            # (n_rec,) block row of each recorded touch
+    rec_cols: np.ndarray            # (n_rec,) sorted-position column
+    seg_rec: np.ndarray             # (n_rec,) first read after the last write
+    has_base_rec: np.ndarray        # (n_rec,) last write inside own chain
+    iw_rec: np.ndarray              # (n_rec,) is-write flag
+    sizes_rec: np.ndarray           # (n_rec,) touch bytes
+    op_rec: np.ndarray              # (n_rec,) global op id
+
+
+@dataclass
+class StreamBatch:
+    """A whole suite of touch streams padded into batched tensors.
+
+    The suite-level counterpart of :class:`TouchStream`: every member
+    stream's (doubled) touch arrays are padded to a common row width —
+    sizes, op-segment ids (offset into one global op axis), write flags,
+    reuse distances, and a validity/record mask per ``(n_traces, max_len)``
+    row. Rows are grouped into similar-width blocks internally (a block
+    only absorbs streams within ``_BLOCK_FILL`` of its width), so a
+    registry that mixes 24-touch HPC proxies with 26k-touch MLPerf traces
+    never pads a short stream to the longest one.
+
+    :meth:`traffic_below` runs the segmented stack-distance/dirty-capacity
+    scan of :func:`traffic_below` over the whole batch — every cumulative
+    scan runs along the row axis, so each row is evaluated with exactly the
+    float-operation sequence the per-trace kernel performs on that stream
+    alone: results are bit-identical to per-trace calls (asserted in
+    tests), which is what lets the sweep engine evaluate a whole registry
+    in one trace x config x capacity pass. The sort and segment structure
+    are capacity-independent, so :meth:`pad` computes them once; repeated
+    sweeps pay only the residency/dirty math.
+    """
+
+    streams: list[TouchStream]
+    op_offsets: np.ndarray          # (n_traces + 1,) int64 global op segments
+    _blocks: list[_PaddedBlock] = field(default_factory=list, repr=False)
+
+    @property
+    def n_traces(self) -> int:
+        return len(self.streams)
+
+    @property
+    def n_ops_total(self) -> int:
+        return int(self.op_offsets[-1])
+
+    def op_slice(self, i: int) -> slice:
+        return slice(int(self.op_offsets[i]), int(self.op_offsets[i + 1]))
+
+    @classmethod
+    def pad(cls, streams: Iterable[TouchStream]) -> "StreamBatch":
+        streams = list(streams)
+        op_offsets = np.zeros(len(streams) + 1, dtype=np.int64)
+        if streams:
+            np.cumsum(np.array([s.n_ops for s in streams], dtype=np.int64),
+                      out=op_offsets[1:])
+        batch = cls(streams=streams, op_offsets=op_offsets)
+        # Group by length, longest first: a block absorbs streams down to
+        # _BLOCK_FILL of its width (bounding padding waste) and splits when
+        # its padded slot count would exceed _BLOCK_SLOTS (bounding the
+        # temporaries of one scan).
+        by_len = sorted((i for i in range(len(streams))
+                         if len(streams[i].op_idx)),
+                        key=lambda i: -len(streams[i].op_idx))
+        group: list[int] = []
+        for i in by_len:
+            n = len(streams[i].op_idx)
+            if group:
+                width = len(streams[group[0]].op_idx)
+                if n < _BLOCK_FILL * width or \
+                        (len(group) + 1) * width > _BLOCK_SLOTS:
+                    batch._blocks.append(batch._build_block(group))
+                    group = []
+            group.append(i)
+        if group:
+            batch._blocks.append(batch._build_block(group))
+        return batch
+
+    def _build_block(self, members: list[int]) -> _PaddedBlock:
+        streams, op_offsets = self.streams, self.op_offsets
+        width = len(streams[members[0]].op_idx)
+        shape = (len(members), width)
+        sizes = np.zeros(shape)
+        dist = np.full(shape, np.inf)
+        is_write = np.zeros(shape, dtype=bool)
+        tid = np.full(shape, PAD_ID, dtype=np.int64)
+        op_global = np.zeros(shape, dtype=np.int64)
+        record = np.zeros(shape, dtype=bool)
+        for r, i in enumerate(members):
+            s = streams[i]
+            n = len(s.op_idx)
+            # Per-row tensor-sorted layout, computed once: the scan order of
+            # traffic_below for this stream alone (pads stay at the tail).
+            order = np.argsort(s.tensor_idx, kind="stable")
+            sizes[r, :n] = s.sizes[order]
+            dist[r, :n] = s.dist[order]
+            is_write[r, :n] = s.is_write[order]
+            tid[r, :n] = s.tensor_idx[order]
+            op_global[r, :n] = s.op_idx[order].astype(np.int64) + op_offsets[i]
+            record[r, :n] = order >= s.second_half
+        R, L = shape
+        pos = np.broadcast_to(np.arange(L, dtype=np.int64)[None, :], (R, L))
+        is_new = np.concatenate(
+            [np.ones((R, 1), dtype=bool), tid[:, 1:] != tid[:, :-1]], axis=1
+        )
+        chain_start = np.maximum.accumulate(np.where(is_new, pos, 0), axis=1)
+        last_write_incl = np.maximum.accumulate(
+            np.where(is_write, pos, -1), axis=1
+        )
+        last_write = np.concatenate(
+            [np.full((R, 1), -1, dtype=np.int64), last_write_incl[:, :-1]],
+            axis=1,
+        )
+        rec = np.nonzero(record)
+        return _PaddedBlock(
+            members=members,
+            sizes=sizes,
+            dist=dist,
+            is_write=is_write,
+            is_inf=np.isinf(dist),
+            rec_rows=rec[0],
+            rec_cols=rec[1],
+            seg_rec=(last_write + 1)[rec],
+            has_base_rec=(last_write >= chain_start)[rec],
+            iw_rec=is_write[rec],
+            sizes_rec=sizes[rec],
+            op_rec=op_global[rec],
+        )
+
+    def traffic_matrices(
+        self, capacities: Sequence[float]
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """One batched scan over all rows: per-op fill/writeback bytes as two
+        ``(n_capacities, n_ops_total)`` matrices over the global op axis.
+        Stream ``i``'s columns are ``op_slice(i)``."""
+        caps = np.asarray(capacities, dtype=np.float64)
+        ncap = len(caps)
+        n_ops_total = self.n_ops_total
+        fills = np.zeros((ncap, n_ops_total))
+        wbs = np.zeros((ncap, n_ops_total))
+        if ncap:
+            for block in self._blocks:
+                self._block_traffic(block, caps, fills, wbs)
+        return fills, wbs
+
+    def traffic_below(self, capacities: Sequence[float]) -> list[list[LevelTraffic]]:
+        """Per-stream, per-capacity traffic: one batched scan over all rows.
+
+        Returns ``out[i][k]`` = :class:`LevelTraffic` of stream ``i`` under
+        an LRU pool of ``capacities[k]`` — each bit-identical to
+        ``traffic_below(streams[i], capacities)[k]``.
+        """
+        fills, wbs = self.traffic_matrices(capacities)
+        return [
+            [LevelTraffic(fills[k, self.op_slice(i)], wbs[k, self.op_slice(i)])
+             for k in range(len(fills))]
+            for i in range(self.n_traces)
+        ]
+
+    def dram_traffic(self, capacities: Sequence[float]) -> np.ndarray:
+        """Total traffic below each capacity: a ``(n_traces, n_capacities)``
+        tensor from one batched pass (the suite-level paper Fig 4)."""
+        per = self.traffic_below(capacities)
+        return np.array([[lt.total for lt in row] for row in per])
+
+    @staticmethod
+    def _block_traffic(block: _PaddedBlock, caps: np.ndarray,
+                       fills: np.ndarray, wbs: np.ndarray) -> None:
+        """The capacity-dependent half of the :func:`traffic_below` scan,
+        batched over rows: per-row residency, the segmented log-space dirty
+        product (cumsum along the row axis), one global scatter.
+
+        Bit-identity with the per-trace kernel survives the masked
+        evaluation tricks below because the skipped cells have *exact*
+        values: ``log(1.0) == 0.0`` for fully-resident reads, and
+        ``exp(0.0) == 1.0`` for segments without partial reads — only
+        partial-residency cells (the narrow band ``0 < cap - dist < size``)
+        ever see a transcendental. Pad slots have zero size and their own
+        tensor chain, so they contribute exact zeros everywhere."""
+        ncap = len(caps)
+        sizes = block.sizes
+        sizes3 = sizes[:, :, None]
+        R, L = sizes.shape
+        n_ops_total = fills.shape[1]
+
+        with np.errstate(invalid="ignore"):  # inf cap - inf dist
+            resident = np.clip(caps[None, None, :] - block.dist[:, :, None],
+                               0.0, sizes3)
+        resident[block.is_inf] = 0.0
+
+        # log of the residency fraction, evaluated ONLY on partial reads.
+        is_read3 = ~block.is_write[:, :, None]
+        partial = (resident > 0.0) & (resident < sizes3) & is_read3
+        log_safe = np.zeros_like(resident)
+        np.divide(resident, sizes3, out=log_safe, where=partial)
+        np.log(log_safe, out=log_safe, where=partial)
+        zero_read = is_read3 & (resident <= 0.0)
+        log_cum = np.concatenate(
+            [np.zeros((R, 1, ncap)), np.cumsum(log_safe, axis=1)], axis=1
+        )
+        zero_cum = np.concatenate(
+            [np.zeros((R, 1, ncap), dtype=np.int32),
+             np.cumsum(zero_read, axis=1, dtype=np.int32)], axis=1
+        )
+
+        # Segmented product at the recorded touches only.
+        rows, cols, seg = block.rec_rows, block.rec_cols, block.seg_rec
+        diff = log_cum[rows, cols] - log_cum[rows, seg]
+        dirty = np.ones_like(diff)
+        np.exp(diff, out=dirty, where=diff != 0.0)
+        dirty[(zero_cum[rows, cols] - zero_cum[rows, seg]) > 0] = 0.0
+        dirty[~block.has_base_rec] = 0.0
+
+        evicted = block.sizes_rec[:, None] - resident[rows, cols]
+        cap_offsets = np.arange(ncap, dtype=np.int64)[None, :] * n_ops_total
+        flat = (block.op_rec[:, None] + cap_offsets)
+        wbs += np.bincount(
+            flat.ravel(), weights=(evicted * dirty).ravel(),
+            minlength=ncap * n_ops_total,
+        ).reshape(ncap, n_ops_total)
+        rd = ~block.iw_rec
+        fills += np.bincount(
+            flat[rd].ravel(), weights=evicted[rd].ravel(),
+            minlength=ncap * n_ops_total,
+        ).reshape(ncap, n_ops_total)
+
+
 @dataclass
 class HierarchyTraffic:
     """Traffic at each boundary of the §III-C memory system, per op."""
@@ -340,3 +704,20 @@ def dram_traffic_sweep(
     from repro.core.sweep import analysis_for  # lazy: sweep imports cachesim
 
     return analysis_for(trace, cyclic=cyclic).dram_traffic(list(llc_capacities))
+
+
+def dram_traffic_sweep_suite(
+    traces: Sequence[Trace], llc_capacities: Sequence[float],
+    cyclic: bool = True,
+) -> dict[str, dict[float, float]]:
+    """Suite-level Fig 4: DRAM traffic vs LLC capacity for MANY traces from
+    one padded :class:`StreamBatch` pass (bit-identical, per trace, to
+    :func:`dram_traffic_sweep`). Returns ``{trace_name: {capacity: bytes}}``
+    in input order."""
+    from repro.core.sweep import suite_analysis_for  # lazy: sweep imports us
+
+    traces = list(traces)
+    caps = [float(c) for c in llc_capacities]
+    mat = suite_analysis_for(traces, cyclic=cyclic).dram_traffic(caps)
+    return {t.name: {c: float(v) for c, v in zip(caps, mat[i])}
+            for i, t in enumerate(traces)}

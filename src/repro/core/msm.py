@@ -17,7 +17,7 @@ from __future__ import annotations
 from dataclasses import dataclass, replace
 
 from repro.core.hw import MB, TPU_V5E
-from repro.core.sweep import analysis_for
+from repro.core.sweep import analysis_for, suite_analysis_for
 from repro.core.trace import Trace
 
 
@@ -165,7 +165,10 @@ class TrafficAnalysis:
         return self.baseline_traffic / max(self.sweep[capacity], 1.0)
 
 
-def analyze(trace: Trace, capacities_mb: tuple[int, ...] = (60, 120, 240, 480, 960, 1920, 3840)) -> TrafficAnalysis:
+DEFAULT_CAPACITIES_MB = (60, 120, 240, 480, 960, 1920, 3840)
+
+
+def analyze(trace: Trace, capacities_mb: tuple[int, ...] = DEFAULT_CAPACITIES_MB) -> TrafficAnalysis:
     caps = [c * MB for c in capacities_mb]
     sweep = analysis_for(trace).dram_traffic(caps)
     return TrafficAnalysis(
@@ -173,3 +176,23 @@ def analyze(trace: Trace, capacities_mb: tuple[int, ...] = (60, 120, 240, 480, 9
         baseline_traffic=sweep[caps[0]],
         sweep=sweep,
     )
+
+
+def analyze_suite(
+    traces: list[Trace],
+    capacities_mb: tuple[int, ...] = DEFAULT_CAPACITIES_MB,
+) -> list[TrafficAnalysis]:
+    """Suite-level :func:`analyze`: one padded
+    :class:`~repro.core.sweep.SuiteAnalysis` pass prices the Fig-4 sweep
+    for every cell at once (bit-identical per trace to :func:`analyze` —
+    the per-trace caches are shared, so mixing the two stays consistent)."""
+    caps = [c * MB for c in capacities_mb]
+    mat = suite_analysis_for(list(traces)).dram_traffic(caps)
+    return [
+        TrafficAnalysis(
+            trace_name=t.name,
+            baseline_traffic=float(row[0]),
+            sweep={c: float(v) for c, v in zip(caps, row)},
+        )
+        for t, row in zip(traces, mat)
+    ]

@@ -72,6 +72,19 @@ class PerfModel:
         )
         self.stream: TouchStream = self.analysis.stream
 
+    @classmethod
+    def batch(cls, traces: list[Trace], cyclic: bool = True) -> list["PerfModel"]:
+        """Suite-batched construction: one padded
+        :class:`~repro.core.sweep.SuiteAnalysis` builds every trace's
+        stream in a single batched Mattson pass and shares the suite
+        traffic cache, so the returned models run from warm state. Each
+        model is bit-identical to ``PerfModel(trace)`` built alone."""
+        from repro.core.sweep import suite_analysis_for
+
+        suite = suite_analysis_for(list(traces), cyclic=cyclic)
+        return [cls(t, cyclic=cyclic, analysis=ta)
+                for t, ta in zip(suite.traces, suite.analyses)]
+
     @property
     def flops(self) -> np.ndarray:
         return self.analysis.flops

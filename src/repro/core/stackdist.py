@@ -1,6 +1,6 @@
 """LRU stack-distance machinery (Mattson et al. 1970).
 
-Three implementations:
+Four implementations:
 
 * :func:`_mattson_pass` — vectorized NumPy Mattson: for every touch it
   returns the number of *unique other bytes* touched since the previous
@@ -10,9 +10,17 @@ Three implementations:
   per-touch loop. This feeds the fractional-residency cache model in
   ``cachesim.py`` and the batched sweep engine in ``sweep.py``.
 
+* :func:`_mattson_pass_batch` — the suite-level batch variant: one call
+  covers a whole ``(n_traces, max_len)`` padded batch of touch streams
+  (``cachesim.StreamBatch``). Every scan (prefix sums, merge counting)
+  runs along ``axis=1`` so each row is computed with exactly the sequence
+  of float operations :func:`_mattson_pass` performs on that stream alone
+  — rows are bit-identical to per-trace calls, which is what lets the
+  sweep engine batch a full scenario registry without perturbing results.
+
 * :func:`_reference_mattson_pass` — the original per-touch Fenwick-tree
   pass, O(T log T) but Python-loop bound. Retained as the parity oracle for
-  the vectorized kernel (``tests/test_sweep.py``) and for the before/after
+  the vectorized kernels (``tests/test_sweep.py``) and for the before/after
   timing in ``benchmarks/bench_core.py``.
 
 * :class:`BlockLRU` — an exact block-granular LRU simulator (slow, small
@@ -156,6 +164,109 @@ def _mattson_pass(tensor_ids: np.ndarray, sizes: np.ndarray) -> np.ndarray:
     prefix = np.concatenate([[0.0], np.cumsum(sizes)])  # prefix[k] = sum sizes[:k]
     window = prefix[np.arange(n)] - prefix[np.clip(prev, 0, None) + 1]
     corr = _weighted_larger_before(prev, sizes)
+    dist[has_prev] = window[has_prev] - corr[has_prev]
+    return dist
+
+
+#: Tensor-id padding sentinel for batched streams: larger than any dense id,
+#: so pad slots group at the tail of every per-row stable sort.
+PAD_ID = np.int64(1) << 62
+
+
+def _prev_occurrence_batch(tensor_ids: np.ndarray) -> np.ndarray:
+    """Row-wise :func:`_prev_occurrence`: ``prev[r, t]`` is the column of the
+    previous touch of ``tensor_ids[r, t]`` within row ``r`` (-1 for firsts).
+    Pad slots (``PAD_ID``) chain among themselves; callers mask them out."""
+    n_rows, n = tensor_ids.shape
+    order = np.argsort(tensor_ids, axis=1, kind="stable")
+    sorted_ids = np.take_along_axis(tensor_ids, order, axis=1)
+    prev_sorted = np.full((n_rows, n), -1, dtype=np.int64)
+    if n > 1:
+        same = sorted_ids[:, 1:] == sorted_ids[:, :-1]
+        prev_sorted[:, 1:][same] = order[:, :-1][same]
+    prev = np.empty((n_rows, n), dtype=np.int64)
+    np.put_along_axis(prev, order, prev_sorted, axis=1)
+    return prev
+
+
+def _weighted_larger_before_batch(
+    values: np.ndarray, weights: np.ndarray
+) -> np.ndarray:
+    """Row-wise :func:`_weighted_larger_before`: ``out[r, t]`` sums
+    ``weights[r, q]`` over ``q < t`` with ``values[r, q] > values[r, t]``.
+
+    The merge tree is positional, so every row shares the same level/block
+    structure; per-row ``argsort``/``cumsum`` along ``axis=1`` plus one
+    row-offset ``searchsorted`` per level batch all rows through each merge
+    level at once. Rows whose stream is shorter than the padded width see
+    only weight-0 pad entries in their blocks, which add exact zeros to the
+    prefix sums — each row's result is bit-identical to the 1D kernel on
+    that row alone (asserted in tests).
+    """
+    n_rows, n = values.shape
+    out = np.zeros((n_rows, n), dtype=np.float64)
+    if n < 2 or n_rows == 0:
+        return out
+    values = np.asarray(values, dtype=np.int64)
+    vmin = int(values.min())
+    base = int(values.max()) - vmin + 2
+    vals = (values - vmin).astype(np.int64)
+    cols = np.arange(n, dtype=np.int64)
+    rows = np.arange(n_rows, dtype=np.int64)[:, None]
+    m = 1
+    while m < n:
+        pair = cols // (2 * m)
+        in_left = (cols // m) % 2 == 0
+        left = cols[in_left]
+        right = cols[~in_left]
+        if len(right):
+            key_left = pair[left][None, :] * base + vals[:, left]
+            ord_l = np.argsort(key_left, axis=1, kind="stable")
+            key_sorted = np.take_along_axis(key_left, ord_l, axis=1)
+            w_sorted = np.take_along_axis(weights[:, left], ord_l, axis=1)
+            cumw = np.concatenate(
+                [np.zeros((n_rows, 1)), np.cumsum(w_sorted, axis=1)], axis=1
+            )
+            q_pair = pair[right]
+            # Per-row searchsorted: offset every row's (sorted) keys into a
+            # disjoint band so one flat call serves the whole batch.
+            row_base = (int(pair[-1]) + 2) * base
+            flat_keys = (rows * row_base + key_sorted).ravel()
+            q_lo = (rows * row_base + q_pair[None, :] * base + vals[:, right])
+            q_hi = (rows * row_base + (q_pair + 1)[None, :] * base)
+            lo = np.searchsorted(flat_keys, q_lo.ravel(), side="right") \
+                .reshape(n_rows, -1) - rows * len(left)
+            hi = np.searchsorted(flat_keys, q_hi.ravel(), side="left") \
+                .reshape(n_rows, -1) - rows * len(left)
+            out[:, right] += np.take_along_axis(cumw, hi, axis=1) \
+                - np.take_along_axis(cumw, lo, axis=1)
+        m *= 2
+    return out
+
+
+def _mattson_pass_batch(tensor_ids: np.ndarray, sizes: np.ndarray) -> np.ndarray:
+    """Batched Mattson over a padded ``(n_traces, max_len)`` touch batch.
+
+    Pad slots carry ``PAD_ID`` ids and zero sizes; their distances are
+    meaningless (callers slice rows to their true lengths). Every real row
+    prefix is computed with the same per-row operation sequence as
+    :func:`_mattson_pass`, so results are bit-identical to calling the 1D
+    kernel once per trace — zero-weight pads only ever append exact zeros
+    to the row-local prefix sums.
+    """
+    tensor_ids = np.asarray(tensor_ids, dtype=np.int64)
+    sizes = np.asarray(sizes, dtype=np.float64)
+    n_rows, n = tensor_ids.shape
+    dist = np.full((n_rows, n), INF)
+    if n == 0 or n_rows == 0:
+        return dist
+    prev = _prev_occurrence_batch(tensor_ids)
+    has_prev = prev >= 0
+    prefix = np.concatenate(
+        [np.zeros((n_rows, 1)), np.cumsum(sizes, axis=1)], axis=1
+    )
+    window = prefix[:, :n] - np.take_along_axis(prefix, np.clip(prev, 0, None) + 1, axis=1)
+    corr = _weighted_larger_before_batch(prev, sizes)
     dist[has_prev] = window[has_prev] - corr[has_prev]
     return dist
 

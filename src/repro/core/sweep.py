@@ -17,11 +17,21 @@ is the single substrate for that shape:
   attribution lives here too; ``repro.core.perfmodel.PerfModel`` is a thin
   facade over this class.
 
+* :class:`SuiteAnalysis` — the suite level: every member trace's stream
+  padded into one :class:`~repro.core.cachesim.StreamBatch`, traffic for a
+  whole (trace x capacity) plane computed in one batched scan, and the
+  bottleneck time model evaluated as a single (config x total-ops) matrix
+  with per-trace slice sums — bit-identical, per trace, to the member
+  :class:`TraceAnalysis` objects (whose caches it fills). Shared
+  process-wide through :func:`suite_analysis_for`.
+
 * :class:`SweepEngine` — evaluates a grid of (trace x config x extra LLC
-  capacity x GPU count) in one pass per trace: the union of every capacity
-  any config touches is prefetched in a single batched traffic call, then
-  every config is costed from the shared cache with one (config x op)
-  matrix evaluation per attribution term. Configs may be
+  capacity x GPU count) in ONE suite pass (``run()``; the original
+  per-trace loop survives as ``run(batched=False)``, the bit-for-bit
+  parity oracle): the union of every capacity any config touches is
+  prefetched in a single batched traffic call, then every config is costed
+  from the shared cache with one suite-wide matrix evaluation per
+  attribution term. Configs may be
   :class:`~repro.core.copa.CopaConfig` (``build()`` is called for you) or
   raw :class:`~repro.core.hw.GpuSpec` (for bandwidth/capacity sensitivity
   sweeps like Figs 8-10). Workloads may be :class:`~repro.core.trace.Trace`
@@ -55,8 +65,10 @@ from repro.core import copa as copa_mod
 from repro.core.cachesim import (
     HierarchyTraffic,
     LevelTraffic,
+    StreamBatch,
     TouchStream,
     build_stream,
+    build_streams,
     traffic_below,
 )
 from repro.core.copa import CopaConfig, EnergyReport
@@ -112,6 +124,78 @@ def _resolve_trace(t: TraceLike) -> Trace:
 
         return registry.scenario(t)
     return t
+
+
+def _dram_cap(spec: GpuSpec) -> float:
+    """The LRU pool capacity DRAM sees for one spec (L2, or L2+L3)."""
+    return float(spec.l2_capacity + spec.l3_capacity) if spec.l3_capacity \
+        else float(spec.l2_capacity)
+
+
+def _bottleneck_time_matrix(
+    specs: Sequence[GpuSpec],
+    flops: np.ndarray,
+    is_tc: np.ndarray,
+    occupancy_for,
+    l2_touch: np.ndarray,
+    uhb_rows,
+    dram_rows,
+    ideal_dram: bool,
+    ideal_mem_other: bool,
+    ideal_occupancy: bool,
+) -> np.ndarray:
+    """THE bottleneck time model as one (config x op) matrix — the single
+    implementation behind :meth:`TraceAnalysis.time_batch` (ops of one
+    trace) and :meth:`SuiteAnalysis.time_batch` (a whole suite's global op
+    axis); only the per-spec row sources differ, so the two can never
+    drift apart. ``occupancy_for(spec)`` returns the per-op occupancy,
+    ``uhb_rows(spec)`` the post-L2 (fill, writeback) rows and
+    ``dram_rows(spec)`` the total DRAM-traffic row for the relevant
+    capacities. Every step is elementwise per op column.
+    ``TraceAnalysis._reference_time`` stays a deliberate per-spec copy —
+    it is the parity oracle this matrix is tested against."""
+    n_ops = len(flops)
+    if ideal_occupancy:
+        occ = np.ones((len(specs), n_ops))
+    else:
+        occ = np.stack([occupancy_for(sp) for sp in specs]) \
+            if n_ops else np.ones((len(specs), 0))
+    f_tc = np.array([sp.fp16_tflops for sp in specs])[:, None] * 1e12
+    f_fp32 = np.array([sp.fp32_tflops for sp in specs])[:, None] * 1e12
+    fmath = np.where(is_tc[None, :], f_tc, f_fp32) * occ
+    flops_b = np.broadcast_to(flops[None, :], fmath.shape)
+    t_math = np.divide(flops_b, fmath, out=np.zeros_like(fmath),
+                       where=fmath > 0)
+
+    if ideal_mem_other:
+        t_l2 = np.zeros_like(fmath)
+        t_uhb = np.zeros_like(fmath)
+    else:
+        l2_bw = np.array([sp.l2_bandwidth for sp in specs])[:, None]
+        t_l2 = l2_touch[None, :] / (l2_bw * occ)
+        has_uhb = np.array([bool(sp.l3_capacity) and sp.l3_bandwidth > 0
+                            for sp in specs])
+        if has_uhb.any():
+            # UHB is per-direction (paper: 2xRD + 2xWR).
+            l3_bw = np.array([sp.l3_bandwidth if u else 1.0
+                              for sp, u in zip(specs, has_uhb)])[:, None]
+            rows = [uhb_rows(sp) for sp in specs]
+            fill = np.stack([r[0] for r in rows])
+            wb = np.stack([r[1] for r in rows])
+            t_uhb = np.where(has_uhb[:, None],
+                             np.maximum(fill / l3_bw, wb / l3_bw), 0.0)
+        else:
+            t_uhb = np.zeros_like(fmath)
+
+    if ideal_dram:
+        t_dram = np.zeros_like(fmath)
+    else:
+        dram_bw = np.array([sp.dram_bandwidth for sp in specs])[:, None]
+        dram_tot = np.stack([dram_rows(sp) for sp in specs])
+        t_dram = dram_tot / dram_bw
+
+    overhead = 0.0 if ideal_occupancy else LAUNCH_OVERHEAD_S
+    return np.maximum.reduce([t_math, t_l2, t_uhb, t_dram]) + overhead
 
 
 @dataclass(frozen=True)
@@ -263,54 +347,28 @@ class TraceAnalysis:
         Returns per-spec total seconds of shape ``(len(specs),)`` — or the
         full ``(len(specs), n_ops)`` matrix with ``per_op=True``. Each row is
         bit-identical to :meth:`_reference_time` on that spec alone: every
-        step is elementwise, so batching configs cannot change a row.
+        step of :func:`_bottleneck_time_matrix` is elementwise, so batching
+        configs cannot change a row.
         """
         specs = list(specs)
         n_ops = len(self.flops)
         if not specs:
             return np.zeros((0, n_ops)) if per_op else np.zeros(0)
-        trs = [self.hierarchy(sp) for sp in specs]
-        if ideal_occupancy:
-            occ = np.ones((len(specs), n_ops))
-        else:
-            occ = np.stack([self._occupancy(sp) for sp in specs]) \
-                if n_ops else np.ones((len(specs), 0))
-        f_tc = np.array([sp.fp16_tflops for sp in specs])[:, None] * 1e12
-        f_fp32 = np.array([sp.fp32_tflops for sp in specs])[:, None] * 1e12
-        fmath = np.where(self.is_tc[None, :], f_tc, f_fp32) * occ
-        flops = np.broadcast_to(self.flops[None, :], fmath.shape)
-        t_math = np.divide(flops, fmath, out=np.zeros_like(fmath),
-                           where=fmath > 0)
-
-        if ideal_mem_other:
-            t_l2 = np.zeros_like(fmath)
-            t_uhb = np.zeros_like(fmath)
-        else:
-            l2_bw = np.array([sp.l2_bandwidth for sp in specs])[:, None]
-            t_l2 = self.l2_touch[None, :] / (l2_bw * occ)
-            has_uhb = np.array([tr.has_l3 and sp.l3_bandwidth > 0
-                                for tr, sp in zip(trs, specs)])
-            if has_uhb.any():
-                # UHB is per-direction (paper: 2xRD + 2xWR).
-                l3_bw = np.array([sp.l3_bandwidth if u else 1.0
-                                  for sp, u in zip(specs, has_uhb)])[:, None]
-                fill = np.stack([tr.post_l2.fill for tr in trs])
-                wb = np.stack([tr.post_l2.writeback for tr in trs])
-                t_uhb = np.where(has_uhb[:, None],
-                                 np.maximum(fill / l3_bw, wb / l3_bw), 0.0)
-            else:
-                t_uhb = np.zeros_like(fmath)
-
-        if ideal_dram:
-            t_dram = np.zeros_like(fmath)
-        else:
-            dram_bw = np.array([sp.dram_bandwidth for sp in specs])[:, None]
-            dram_tot = np.stack([tr.dram.fill + tr.dram.writeback
-                                 for tr in trs])
-            t_dram = dram_tot / dram_bw
-
-        overhead = 0.0 if ideal_occupancy else LAUNCH_OVERHEAD_S
-        t_op = np.maximum.reduce([t_math, t_l2, t_uhb, t_dram]) + overhead
+        self.prefetch({c for sp in specs for c in self.capacities_for(sp)})
+        t_op = _bottleneck_time_matrix(
+            specs, self.flops, self.is_tc, self._occupancy, self.l2_touch,
+            uhb_rows=lambda sp: (
+                self._levels[float(sp.l2_capacity)].fill,
+                self._levels[float(sp.l2_capacity)].writeback,
+            ),
+            dram_rows=lambda sp: (
+                self._levels[_dram_cap(sp)].fill
+                + self._levels[_dram_cap(sp)].writeback
+            ),
+            ideal_dram=ideal_dram,
+            ideal_mem_other=ideal_mem_other,
+            ideal_occupancy=ideal_occupancy,
+        )
         if per_op:
             return t_op
         return t_op.sum(axis=-1)
@@ -438,6 +496,224 @@ def analysis_for(trace: Trace, cyclic: bool = True) -> TraceAnalysis:
     else:
         _ANALYSES.move_to_end(key)
     return _ANALYSES[key][1]
+
+
+class SuiteAnalysis:
+    """Suite-level analysis: a whole set of traces behind ONE batched pass.
+
+    Pads every member trace's touch stream into a
+    :class:`~repro.core.cachesim.StreamBatch` (one batched Mattson pass for
+    construction, one batched segmented scan per new capacity set) and
+    concatenates the per-op static vectors onto a single global op axis, so
+    the bottleneck time model evaluates the *entire suite* as one
+    (config x total-ops) matrix. Every number is bit-identical to running
+    the member :class:`TraceAnalysis` objects one at a time (asserted in
+    tests): padded rows are scanned with exactly the per-trace operation
+    sequence, and the time model is elementwise with per-trace slice sums.
+
+    Member analyses share the suite's traffic cache (levels are installed
+    into each member's ``_levels``), so single-trace APIs — ``PerfModel``,
+    ``msm.analyze``, ``dram_traffic_sweep`` — stay warm after a suite pass.
+    """
+
+    def __init__(self, traces: Sequence[Trace], cyclic: bool = True,
+                 analyses: Sequence[TraceAnalysis] | None = None):
+        self.traces = list(traces)
+        self.cyclic = cyclic
+        if analyses is None:
+            streams = build_streams(self.traces, cyclic=cyclic)
+            analyses = [TraceAnalysis(t, cyclic=cyclic, stream=s)
+                        for t, s in zip(self.traces, streams)]
+        self.analyses = list(analyses)
+        self.batch = StreamBatch.pad([ta.stream for ta in self.analyses])
+        self.flops = np.concatenate(
+            [ta.flops for ta in self.analyses]) if self.analyses \
+            else np.zeros(0)
+        self.parallelism = np.concatenate(
+            [ta.parallelism for ta in self.analyses]) if self.analyses \
+            else np.zeros(0)
+        self.is_tc = np.concatenate(
+            [ta.is_tc for ta in self.analyses]) if self.analyses \
+            else np.zeros(0, dtype=bool)
+        self._occ: dict[int, np.ndarray] = {}
+        self._l2_touch: np.ndarray | None = None
+        # capacity -> (per-op fill row, per-op writeback row) on the global
+        # op axis; rows come from the batched scan (or are concatenated from
+        # member caches when a member was analyzed before this suite).
+        self._levels_cat: dict[float, tuple[np.ndarray, np.ndarray]] = {}
+        self._totals: dict[float, np.ndarray] = {}
+
+    @property
+    def n_traces(self) -> int:
+        return len(self.analyses)
+
+    def op_slice(self, i: int) -> slice:
+        return self.batch.op_slice(i)
+
+    @property
+    def l2_touch(self) -> np.ndarray:
+        """Per-op L2 touch bytes on the global op axis (and installed into
+        every member's cache as its slice view)."""
+        if self._l2_touch is None:
+            l2 = np.zeros(self.batch.n_ops_total)
+            for i, ta in enumerate(self.analyses):
+                s = ta.stream
+                half = s.second_half
+                sl = self.op_slice(i)
+                if ta._l2_touch is not None:
+                    l2[sl] = ta._l2_touch
+                    continue
+                seg = l2[sl]
+                np.add.at(seg, s.op_idx[half:], s.sizes[half:])
+                ta._l2_touch = seg
+            self._l2_touch = l2
+        return self._l2_touch
+
+    # -- traffic ---------------------------------------------------------------
+    def prefetch(self, capacities: Iterable[float]) -> None:
+        """Batch-compute every capacity not yet known suite-wide: ONE padded
+        scan covers all member traces, then each member's per-trace cache is
+        filled with its row slices. Capacities some members already have
+        individually still go through the batch (one scan beats N-1
+        per-trace scans); those members keep their cached object — the
+        batch row is bit-identical to it, so suite state stays consistent
+        either way."""
+        want = sorted({float(c) for c in capacities})
+        missing = [c for c in want if c not in self._levels_cat]
+        if missing:
+            fills, wbs = self.batch.traffic_matrices(missing)
+            for k, cap in enumerate(missing):
+                self._levels_cat[cap] = (fills[k], wbs[k])
+                for i, ta in enumerate(self.analyses):
+                    sl = self.op_slice(i)
+                    ta._levels.setdefault(
+                        cap, LevelTraffic(fills[k, sl], wbs[k, sl]))
+
+    def totals_below(self, capacity: float) -> np.ndarray:
+        """Per-trace total traffic below one capacity, shape (n_traces,)."""
+        cap = float(capacity)
+        if cap not in self._totals:
+            self.prefetch([cap])
+            self._totals[cap] = np.array(
+                [ta._levels[cap].total for ta in self.analyses])
+        return self._totals[cap]
+
+    def dram_traffic(self, capacities: Sequence[float]) -> np.ndarray:
+        """(n_traces, n_capacities) DRAM-traffic tensor in one call — the
+        suite-level paper Fig 4."""
+        caps = [float(c) for c in capacities]
+        self.prefetch(caps)
+        if not caps or not self.traces:
+            return np.zeros((len(self.traces), len(caps)))
+        return np.column_stack([self.totals_below(c) for c in caps])
+
+    # -- suite time model --------------------------------------------------------
+    def _occupancy(self, spec: GpuSpec) -> np.ndarray:
+        occ = self._occ.get(spec.concurrency)
+        if occ is None:
+            occ = np.minimum(1.0, self.parallelism / spec.concurrency) ** 0.55
+            self._occ[spec.concurrency] = occ
+        return occ
+
+    def _level_rows(self, cap: float) -> tuple[np.ndarray, np.ndarray]:
+        self.prefetch([cap])
+        return self._levels_cat[float(cap)]
+
+    def time_batch(
+        self,
+        specs: Sequence[GpuSpec],
+        ideal_dram: bool = False,
+        ideal_mem_other: bool = False,
+        ideal_occupancy: bool = False,
+        per_op: bool = False,
+    ) -> np.ndarray:
+        """The (config x op) bottleneck matrix over the WHOLE suite's global
+        op axis. Returns per-(spec, trace) totals of shape
+        ``(len(specs), n_traces)`` — or the ``(len(specs), n_ops_total)``
+        matrix with ``per_op=True``. Every step is elementwise and the
+        per-trace sums run over each trace's own slice, so each
+        (spec, trace) cell is bit-identical to
+        ``TraceAnalysis.time_batch`` on that trace alone."""
+        specs = list(specs)
+        n_ops = len(self.flops)
+        if not specs:
+            return np.zeros((0, n_ops)) if per_op \
+                else np.zeros((0, self.n_traces))
+        self.prefetch({c for sp in specs
+                       for c in TraceAnalysis.capacities_for(sp)})
+        t_op = _bottleneck_time_matrix(
+            specs, self.flops, self.is_tc, self._occupancy, self.l2_touch,
+            uhb_rows=lambda sp: self._level_rows(sp.l2_capacity),
+            dram_rows=lambda sp: np.add(*self._level_rows(_dram_cap(sp))),
+            ideal_dram=ideal_dram,
+            ideal_mem_other=ideal_mem_other,
+            ideal_occupancy=ideal_occupancy,
+        )
+        if per_op:
+            return t_op
+        return np.stack(
+            [t_op[:, self.op_slice(i)].sum(axis=1)
+             for i in range(self.n_traces)], axis=1,
+        ) if self.n_traces else np.zeros((len(specs), 0))
+
+    def attribution_grid(
+        self, specs: Sequence[GpuSpec]
+    ) -> list[list[tuple[float, dict[str, float]]]]:
+        """Actual time + the paper's peel-order attribution for every
+        (trace, spec) cell: four suite-wide matrix evaluations total.
+        ``out[i][j]`` matches ``analyses[i].attribution_batch(specs)[j]``
+        bit for bit."""
+        specs = list(specs)
+        t_act = self.time_batch(specs)
+        t_nd = self.time_batch(specs, ideal_dram=True)
+        t_nm = self.time_batch(specs, ideal_dram=True, ideal_mem_other=True)
+        t_m = self.time_batch(specs, ideal_dram=True, ideal_mem_other=True,
+                              ideal_occupancy=True)
+        out = []
+        for i in range(self.n_traces):
+            row = []
+            for j in range(len(specs)):
+                act, nd, nm, m = (float(t_act[j, i]), float(t_nd[j, i]),
+                                  float(t_nm[j, i]), float(t_m[j, i]))
+                row.append((act, {
+                    "Math": m,
+                    "SM util": max(nm - m, 0.0),
+                    "Memory others": max(nd - nm, 0.0),
+                    "DRAM BW": max(act - nd, 0.0),
+                }))
+            out.append(row)
+        return out
+
+
+# Process-wide SuiteAnalysis cache, keyed by the member-trace identities:
+# repeated suite sweeps (benchmarks re-running figures, serve grids priced
+# after an engine run) reuse the padded batch and every computed capacity.
+_SUITES: OrderedDict[tuple, SuiteAnalysis] = OrderedDict()
+_SUITES_MAX = 32
+
+
+def suite_analysis_for(traces: Sequence[Trace], cyclic: bool = True) -> SuiteAnalysis:
+    """Process-wide :class:`SuiteAnalysis` cache (keyed by trace identities).
+
+    Member analyses are shared with :func:`analysis_for`'s per-trace cache,
+    so suite passes and single-trace APIs warm each other."""
+    traces = list(traces)
+    key = (cyclic,) + tuple((id(t), len(t.ops)) for t in traces)
+    hit = _SUITES.get(key)
+    if hit is not None and all(a is b for a, b in zip(hit.traces, traces)):
+        _SUITES.move_to_end(key)
+        return hit
+    # Build member streams in one batched pass BEFORE analysis_for would
+    # build them one at a time, then share the per-trace analysis cache.
+    build_streams(traces, cyclic=cyclic)
+    suite = SuiteAnalysis(
+        traces, cyclic=cyclic,
+        analyses=[analysis_for(t, cyclic=cyclic) for t in traces],
+    )
+    _SUITES[key] = suite
+    if len(_SUITES) > _SUITES_MAX:
+        _SUITES.popitem(last=False)
+    return suite
 
 
 @dataclass(frozen=True)
@@ -629,6 +905,29 @@ def _kv_step_time(spec: GpuSpec, kv_bytes: float) -> float:
     return kv_bytes / bw
 
 
+def prefill_cost_per_token(scenario: str, configs: Sequence[ConfigLike]) -> np.ndarray:
+    """Per-config prefill seconds/token priced from a REAL prefill trace.
+
+    ``scenario`` names a registry prefill cell (``lm.<arch>.prefill_*``);
+    its trace models one prefill chunk of ``batch x seq_len`` prompt
+    tokens, so ONE ``time_batch`` call over all configs divided by the
+    chunk's token count yields the per-token prefill cost each config's
+    :class:`CostGrid` charges (ROADMAP serving follow-up: the flat s/token
+    knob, replaced by trace-sourced pricing)."""
+    from repro.configs import SHAPES  # lazy: configs sit above core
+    from repro.workloads import registry  # lazy: workloads sit above core
+
+    shape = scenario.rsplit(".", 1)[1]
+    if shape not in SHAPES or SHAPES[shape].step != "prefill":
+        raise KeyError(
+            f"{scenario!r} is not a prefill scenario (expected an "
+            f"lm.<arch>.prefill_* registry cell)")
+    trace = registry.scenario(scenario)
+    tokens = max(trace.batch_size, 1) * SHAPES[shape].seq_len
+    specs = [_as_spec(c) for c in configs]
+    return analysis_for(trace).time_batch(specs) / tokens
+
+
 def serve_cost_grids(
     bench: str,
     configs: Sequence[ConfigLike],
@@ -636,20 +935,27 @@ def serve_cost_grids(
     kv_bytes_per_token: float = 0.0,
     seq_edges: Sequence[float] = DEFAULT_SEQ_EDGES,
     prefill_s_per_token: float = 0.0,
+    prefill_scenario: str | None = None,
     tokens_per_pass: int = 1,
     scenario_prefix: str = "serve.mlperf",
 ) -> dict[str, CostGrid]:
     """Export (batch x KV-bucket) step-time grids for every config, priced
     from the registry's ``serve.<bench>.b<batch>`` scenarios.
 
-    One ``TraceAnalysis.time_batch`` call per batch bucket covers ALL
-    configs, so grid construction is (config x batch) batched exactly like
-    the sweep engine. ``tokens_per_pass`` divides the trace time for
-    scenarios whose one pass decodes several tokens (e.g. gnmt's 50-step
-    decoder), yielding a per-output-token step cost. With
-    ``kv_bytes_per_token`` zero (the one-shot MLPerf semantics) the grid has
-    a single KV bucket and step times equal the engine's serve-row times
-    bit-for-bit."""
+    ONE suite-level ``time_batch`` call covers every (batch bucket, config)
+    cell: the batch scenarios share a :class:`SuiteAnalysis`, so pricing a
+    serve grid after an engine run re-uses the same padded batch and
+    traffic instead of re-running the per-scenario pipeline.
+    ``tokens_per_pass`` divides the trace time for scenarios whose one pass
+    decodes several tokens (e.g. gnmt's 50-step decoder), yielding a
+    per-output-token step cost. With ``kv_bytes_per_token`` zero (the
+    one-shot MLPerf semantics) the grid has a single KV bucket and step
+    times equal the engine's serve-row times bit-for-bit.
+
+    Prefill pricing: ``prefill_scenario`` names an ``lm.<arch>.prefill_*``
+    cell whose trace prices prefill per config (one extra ``time_batch``
+    over the prefill chunk — see :func:`prefill_cost_per_token`); it
+    overrides the flat ``prefill_s_per_token`` knob."""
     from repro.workloads import registry  # lazy: workloads sit above core
 
     names = registry.scenarios(f"{scenario_prefix}.{bench}.b")
@@ -659,11 +965,13 @@ def serve_cost_grids(
     batches = tuple(b for b, _ in by_batch)
     specs = [(_config_name(c), _as_spec(c)) for c in configs]
     spec_objs = [s for _, s in specs]
-    base = np.empty((len(batches), len(specs)))
-    for k, (_, scen) in enumerate(by_batch):
-        base[k] = analysis_for(registry.scenario(scen)).time_batch(spec_objs)
-    base /= max(int(tokens_per_pass), 1)
+    suite = suite_analysis_for([registry.scenario(scen) for _, scen in by_batch])
+    base = suite.time_batch(spec_objs).T / max(int(tokens_per_pass), 1)
 
+    if prefill_scenario is not None:
+        prefill = prefill_cost_per_token(prefill_scenario, configs)
+    else:
+        prefill = np.full(len(specs), float(prefill_s_per_token))
     edges = tuple(float(e) for e in seq_edges) if kv_bytes_per_token > 0 \
         else (float("inf"),)
     out = {}
@@ -676,7 +984,7 @@ def serve_cost_grids(
             batches=batches,
             seq_edges=edges,
             step_time_s=base[:, ci][:, None] + kv[None, :],
-            prefill_s_per_token=float(prefill_s_per_token),
+            prefill_s_per_token=float(prefill[ci]),
         )
     return out
 
@@ -742,7 +1050,129 @@ class SweepEngine:
             self._private[key] = TraceAnalysis(trace, cyclic=self.cyclic)
         return self._private[key]
 
-    def run(self) -> SweepGrid:
+    def suite_analysis(self, traces: Sequence[Trace]) -> SuiteAnalysis:
+        if self._share:
+            return suite_analysis_for(traces, cyclic=self.cyclic)
+        streams = build_streams(traces, cyclic=self.cyclic)
+        for t, s in zip(traces, streams):
+            if id(t) not in self._private:
+                self._private[id(t)] = TraceAnalysis(t, cyclic=self.cyclic,
+                                                     stream=s)
+        return SuiteAnalysis(traces, cyclic=self.cyclic,
+                             analyses=[self._private[id(t)] for t in traces])
+
+    def run(self, batched: bool = True) -> SweepGrid:
+        """Evaluate the grid. The default path pads every workload's touch
+        stream into one :class:`~repro.core.cachesim.StreamBatch` and costs
+        the whole (trace x config x capacity x GPU count) space through a
+        single :class:`SuiteAnalysis` pass; ``batched=False`` runs the
+        original per-trace loop, kept as the bit-for-bit parity oracle
+        (asserted in tests) and the before/after benchmark baseline."""
+        if not batched:
+            return self._run_per_trace()
+        base_spec = _as_spec(self.baseline)
+        specs = [(_config_name(c), _as_spec(c)) for c in self.configs]
+        spec_objs = [spec for _, spec in specs]
+        grid = SweepGrid(baseline=_config_name(self.baseline))
+        caps: set[float] = set(self.extra_llc_capacities)
+        for _, spec in specs:
+            caps.update(TraceAnalysis.capacities_for(spec))
+        caps.update(TraceAnalysis.capacities_for(base_spec))
+
+        # Materialize every (workload, n) trace, dedup by identity: scale-out
+        # families often return the same object at several instance counts.
+        jobs: list[tuple[ScaleOutWorkload, Trace, list[tuple[int, Trace]]]] = []
+        index: dict[int, int] = {}
+        suite_traces: list[Trace] = []
+        for w in self.workloads:
+            trace1 = w.trace_for(1)
+            per_n = [(n, trace1 if n == 1 else w.trace_for(n))
+                     for n in self.gpu_counts]
+            jobs.append((w, trace1, per_n))
+            for _, t in [(1, trace1)] + per_n:
+                if id(t) not in index:
+                    index[id(t)] = len(suite_traces)
+                    suite_traces.append(t)
+        suite = self.suite_analysis(suite_traces)
+        suite.prefetch(caps)
+
+        # One suite pass: base-config times, the four-term attribution, and
+        # per-(spec, trace) traffic/energy vectors.
+        t_base_all = suite.time_batch([base_spec])[0] \
+            if suite_traces else np.zeros(0)
+        att_all = suite.attribution_grid(spec_objs)
+        post_tot = {spec.l2_capacity: suite.totals_below(spec.l2_capacity)
+                    for _, spec in specs}
+        dram_tot = {_dram_cap(spec):
+                    suite.totals_below(_dram_cap(spec))
+                    for _, spec in specs}
+        l2_sum = np.array([float(ta.l2_touch.sum())
+                           for ta in suite.analyses])
+
+        for w, trace1, per_n in jobs:
+            i1 = index[id(trace1)]
+            t_base = float(t_base_all[i1])
+            base_batch = trace1.batch_size
+            # 1-GPU speedup per config anchors the scaling-efficiency ratio.
+            sp1 = {name: (t_base / att[0] if att[0] > 0 else float("inf"))
+                   for (name, _), att in zip(specs, att_all[i1])}
+
+            for n, trace_n in per_n:
+                i = index[id(trace_n)]
+                ta = suite.analyses[i]
+                coll = ring_allreduce_time(
+                    ta.grad_bytes, n, self.ici_bandwidth, self.ici_latency_s
+                ) if trace_n.kind == "training" else 0.0
+                batch_n = trace_n.batch_size
+
+                for (name, spec), (t_act, segments) in zip(specs, att_all[i]):
+                    time_s = t_act + coll
+                    if n == 1 and coll == 0.0:
+                        sp = t_base / time_s
+                    elif batch_n and base_batch:
+                        # throughput ratio at whatever the global batch is
+                        sp = (batch_n * n / time_s) / (base_batch / t_base)
+                    else:
+                        sp = n * t_base / time_s  # batchless: weak scaling
+                    eff = sp / (n * sp1[name]) if sp1[name] > 0 else 1.0
+                    post = float(post_tot[spec.l2_capacity][i])
+                    dram = float(dram_tot[_dram_cap(spec)][i])
+                    has_l3 = bool(spec.l3_capacity)
+                    l3_bytes = max(post - dram, 0.0) if has_l3 else 0.0
+                    dram_j = dram * 8.0 * spec.dram_energy_pj_per_bit * 1e-12
+                    l3_j = l3_bytes * 8.0 \
+                        * (spec.dram_energy_pj_per_bit / 4.0) * 1e-12
+                    grid.add(SweepResult(
+                        trace=w.name,
+                        kind=trace_n.kind,
+                        config=name,
+                        spec_name=spec.name,
+                        time_s=time_s,
+                        baseline_time_s=t_base,
+                        speedup=sp,
+                        segments=segments,
+                        dram_bytes=dram,
+                        l3_bytes=l3_bytes,
+                        uhb_bytes=post if has_l3 else 0.0,
+                        l2_bytes=float(l2_sum[i]),
+                        dram_joules=dram_j,
+                        l3_joules=l3_j,
+                        n_gpus=n,
+                        per_gpu_time_s=t_act,
+                        collective_time_s=coll,
+                        throughput=(batch_n or 1) * n / time_s,
+                        scaling_efficiency=eff,
+                    ))
+            if self.extra_llc_capacities:
+                grid.llc_traffic[w.name] = suite.analyses[i1].dram_traffic(
+                    self.extra_llc_capacities
+                )
+        return grid
+
+    def _run_per_trace(self) -> SweepGrid:
+        """The pre-batch per-trace loop: one TraceAnalysis, one traffic
+        prefetch and one attribution per trace. Parity oracle for
+        :meth:`run` and the benchmark baseline in ``bench_core``."""
         base_spec = _as_spec(self.baseline)
         specs = [(_config_name(c), _as_spec(c)) for c in self.configs]
         spec_objs = [spec for _, spec in specs]

@@ -32,12 +32,17 @@ streams (steady Poisson, burst-modulated) that :func:`resolve` returns as
 :func:`resolve`; glob patterns (``serve.mlperf.*``, ``arrivals.poisson.*``)
 resolve to every matching name. Suites group scenarios the way the paper's
 figures do (``mlperf.train.large``, ``serve.mlperf``, ``hpc``, ...).
-Factories are lazy and cached by the underlying modules, so enumerating
-names costs nothing until a trace is actually built.
+Factories are lazy, and built traces are memoized registry-side by scenario
+name (:func:`scenario`), so enumerating names costs nothing and repeated
+sweeps never re-run a factory. :func:`suite_analysis` resolves a suite (or
+scenario glob) straight to the shared suite-level
+:class:`~repro.core.sweep.SuiteAnalysis` — one batched pass over all its
+traces.
 """
 from __future__ import annotations
 
 from fnmatch import fnmatchcase
+from functools import lru_cache
 from typing import Callable, Union
 
 from repro.core.sweep import ScaleOutWorkload
@@ -73,15 +78,24 @@ def register_scaleout(name: str, workload: ScaleOutWorkload,
         _SUITES.setdefault(s, []).append(name)
 
 
+@lru_cache(maxsize=None)
+def _build_scenario(name: str) -> Trace:
+    """Registry-level trace memo, keyed on scenario name: repeated
+    ``resolve()``/``suite_traces()``/sweep calls must not re-enter the
+    factory (several factories are themselves lru-cached, but with bounded
+    sizes that a full-registry sweep can evict). Unbounded is safe — the
+    key space is the fixed registry. ``register()`` only adds new names,
+    so entries never go stale."""
+    return _FACTORIES[name]()
+
+
 def scenario(name: str) -> Trace:
-    """Build (or fetch the cached) trace for one scenario name."""
-    try:
-        factory = _FACTORIES[name]
-    except KeyError:
+    """Build (or fetch the memoized) trace for one scenario name."""
+    if name not in _FACTORIES:
         raise KeyError(
             f"unknown scenario {name!r}; see repro.workloads.registry.scenarios()"
-        ) from None
-    return factory()
+        )
+    return _build_scenario(name)
 
 
 def scaleout(name: str) -> ScaleOutWorkload:
@@ -182,6 +196,27 @@ def suite_traces(name: str) -> list[Trace]:
                 f"not a scenario trace; resolve() it directly")
         out.append(obj)
     return out
+
+
+def suite_analysis(name: str):
+    """One-call suite-level analysis: resolve a suite name (or a glob over
+    scenario names) and return the shared
+    :class:`~repro.core.sweep.SuiteAnalysis` over its traces — every
+    member's touch stream built in one batched Mattson pass, traffic and
+    time evaluated suite-wide per capacity/config set."""
+    from repro.core.sweep import suite_analysis_for  # lazy: avoid cycle
+
+    if name in _SUITES:
+        traces = suite_traces(name)
+    else:
+        hits = [n for n in match(name) if n in _FACTORIES] \
+            if any(ch in name for ch in _GLOB_CHARS) else []
+        if not hits:
+            raise KeyError(
+                f"{name!r} is neither a suite nor a glob matching scenarios; "
+                f"see suites() and scenarios()")
+        traces = [scenario(n) for n in hits]
+    return suite_analysis_for(traces)
 
 
 # --- built-in population ------------------------------------------------------

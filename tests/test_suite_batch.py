@@ -1,0 +1,433 @@
+"""Suite-level batching parity: StreamBatch / SuiteAnalysis / the batched
+SweepEngine path must reproduce the per-trace pipeline BIT FOR BIT.
+
+Layers, bottom-up:
+
+* batched Mattson (`_mattson_pass_batch`) vs the 1D kernel and the Fenwick
+  reference;
+* `StreamBatch.traffic_below` vs per-trace `traffic_below` (exact) and
+  `_reference_traffic_below` (per-touch oracle, approx);
+* `SuiteAnalysis` time/attribution/dram vs per-trace `TraceAnalysis`;
+* `SweepEngine.run()` (suite-batched) vs `run(batched=False)` (the
+  pre-refactor per-trace loop) over the full default benchmark suite —
+  every SweepResult field equal, which is the PR's acceptance criterion.
+
+A fixed-seed deterministic suite always runs; the randomized-property
+variant is hypothesis-gated like the other property suites.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import copa
+from repro.core.cachesim import (
+    StreamBatch,
+    _reference_traffic_below,
+    _STREAMS,
+    build_stream,
+    build_streams,
+    dram_traffic_sweep,
+    dram_traffic_sweep_suite,
+    traffic_below,
+)
+from repro.core.hw import MB
+from repro.core.stackdist import (
+    PAD_ID,
+    _mattson_pass,
+    _mattson_pass_batch,
+    _reference_mattson_pass,
+)
+from repro.core.sweep import (
+    SuiteAnalysis,
+    SweepEngine,
+    TraceAnalysis,
+    prefill_cost_per_token,
+    serve_cost_grids,
+    suite_analysis_for,
+)
+from repro.core.trace import Trace
+from repro.workloads import registry
+
+
+def _random_trace(rng, n_ops, n_tensors, streaming=0.2, name="rand") -> Trace:
+    tr = Trace(name)
+    for i in range(n_ops):
+        reads, writes = [], []
+        for _ in range(int(rng.integers(0, 3))):
+            t = int(rng.integers(0, n_tensors))
+            nm = f"in.t{t}" if rng.random() < streaming else f"t{t}"
+            reads.append((nm, int(rng.integers(1, 20)) * MB))
+        for _ in range(int(rng.integers(0, 2))):
+            writes.append((f"t{int(rng.integers(0, n_tensors))}",
+                           int(rng.integers(1, 20)) * MB))
+        if reads or writes:
+            tr.emit(f"op{i}", 1e6, reads=reads, writes=writes)
+    return tr
+
+
+def _random_suite(rng, n_traces, max_ops=80):
+    """Mixed-length traces so padding amounts inside the batch vary."""
+    return [
+        _random_trace(rng, int(rng.integers(1, max_ops)),
+                      int(rng.integers(2, 10)), name=f"rand{i}")
+        for i in range(n_traces)
+    ]
+
+
+CAPS = [float(c) * MB for c in (1, 7, 33, 120, 1000)] + [float(1 << 50)]
+
+
+# --- batched Mattson ----------------------------------------------------------
+
+def test_mattson_batch_rows_bitwise_equal_1d_kernel():
+    """Padded rows must get exactly the 1D kernel's floats — the property
+    that makes suite batching invisible to every downstream consumer."""
+    rng = np.random.default_rng(7)
+    for _ in range(40):
+        n_rows = int(rng.integers(1, 7))
+        max_len = int(rng.integers(1, 150))
+        ids2 = np.full((n_rows, max_len), PAD_ID, dtype=np.int64)
+        sz2 = np.zeros((n_rows, max_len))
+        rows = []
+        for r in range(n_rows):
+            n = int(rng.integers(0, max_len + 1))
+            ids = rng.integers(0, int(rng.integers(1, 12)), n)
+            sz = rng.integers(1, 60, n).astype(float)
+            ids2[r, :n] = ids
+            sz2[r, :n] = sz
+            rows.append((n, _mattson_pass(ids, sz)))
+        got = _mattson_pass_batch(ids2, sz2)
+        for r, (n, want) in enumerate(rows):
+            assert np.array_equal(got[r, :n], want, equal_nan=True)
+
+
+def test_mattson_batch_matches_fenwick_reference():
+    rng = np.random.default_rng(11)
+    n_rows, max_len = 5, 90
+    ids2 = np.full((n_rows, max_len), PAD_ID, dtype=np.int64)
+    sz2 = np.zeros((n_rows, max_len))
+    lens = []
+    for r in range(n_rows):
+        n = int(rng.integers(1, max_len + 1))
+        ids2[r, :n] = rng.integers(0, 9, n)
+        sz2[r, :n] = rng.integers(1, 40, n).astype(float)
+        lens.append(n)
+    got = _mattson_pass_batch(ids2, sz2)
+    for r, n in enumerate(lens):
+        want = _reference_mattson_pass(ids2[r, :n], sz2[r, :n])
+        inf = np.isinf(want)
+        assert np.array_equal(np.isinf(got[r, :n]), inf)
+        assert np.allclose(got[r, :n][~inf], want[~inf], rtol=1e-9, atol=1e-6)
+
+
+def test_build_streams_matches_build_stream_bitwise():
+    rng = np.random.default_rng(3)
+    traces = _random_suite(rng, 12) + [_random_suite(rng, 1, max_ops=400)[0]]
+    streams = build_streams(traces)
+    _STREAMS.clear()  # force per-trace rebuilds
+    for t, s in zip(traces, streams):
+        one = build_stream(t)
+        assert np.array_equal(s.dist, one.dist, equal_nan=True)
+        assert np.array_equal(s.tensor_idx, one.tensor_idx)
+        assert np.array_equal(s.sizes, one.sizes)
+        assert s.second_half == one.second_half
+
+
+def test_build_stream_caches_per_trace():
+    rng = np.random.default_rng(4)
+    tr = _random_trace(rng, 20, 5)
+    assert build_stream(tr) is build_stream(tr)
+    tr.emit("grow", 1e6, writes=[("tnew", MB)])
+    s2 = build_stream(tr)  # op count changed -> fresh stream
+    assert s2.n_ops == len(tr.ops)
+
+
+# --- StreamBatch traffic ------------------------------------------------------
+
+def test_stream_batch_traffic_bitwise_vs_per_trace():
+    rng = np.random.default_rng(42)
+    traces = _random_suite(rng, 25) + _random_suite(rng, 5, max_ops=6)
+    streams = build_streams(traces)
+    batch = StreamBatch.pad(streams)
+    got = batch.traffic_below(CAPS)
+    for i, s in enumerate(streams):
+        want = traffic_below(s, CAPS)
+        for k in range(len(CAPS)):
+            assert np.array_equal(got[i][k].fill, want[k].fill), (i, k)
+            assert np.array_equal(got[i][k].writeback, want[k].writeback), (i, k)
+
+
+def test_stream_batch_traffic_matches_reference_oracle():
+    rng = np.random.default_rng(13)
+    traces = _random_suite(rng, 10, max_ops=40)
+    streams = build_streams(traces)
+    batch = StreamBatch.pad(streams)
+    got = batch.traffic_below(CAPS[:4])
+    for i, s in enumerate(streams):
+        ref = _reference_traffic_below(s, CAPS[:4])
+        for k in range(4):
+            assert np.allclose(got[i][k].fill, ref[k].fill,
+                               rtol=1e-9, atol=1e-3)
+            assert np.allclose(got[i][k].writeback, ref[k].writeback,
+                               rtol=1e-9, atol=1e-3)
+
+
+def test_stream_batch_padding_invariance():
+    """A trace's row must not depend on WHICH other traces share its batch
+    (and hence on how much padding it gets)."""
+    rng = np.random.default_rng(5)
+    tr = _random_trace(rng, 30, 6, name="probe")
+    small = StreamBatch.pad(build_streams([tr]))
+    big = StreamBatch.pad(build_streams(
+        [tr] + _random_suite(rng, 8, max_ops=200)))
+    a = small.traffic_below(CAPS)[0]
+    b = big.traffic_below(CAPS)[0]
+    for k in range(len(CAPS)):
+        assert np.array_equal(a[k].fill, b[k].fill)
+        assert np.array_equal(a[k].writeback, b[k].writeback)
+
+
+def test_stream_batch_real_scenarios_bitwise():
+    names = (registry.suite("mlperf.train.small")[:2]
+             + registry.suite("mlperf.infer.small")[:2]
+             + registry.suite("hpc")[:4])
+    traces = [registry.scenario(n) for n in names]
+    streams = build_streams(traces)
+    batch = StreamBatch.pad(streams)
+    got = batch.traffic_below(CAPS[:3])
+    for i, s in enumerate(streams):
+        want = traffic_below(s, CAPS[:3])
+        for k in range(3):
+            assert np.array_equal(got[i][k].fill, want[k].fill)
+            assert np.array_equal(got[i][k].writeback, want[k].writeback)
+
+
+# --- SuiteAnalysis ------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def mixed_traces():
+    rng = np.random.default_rng(17)
+    return _random_suite(rng, 8) + [
+        registry.scenario("mlperf.infer.resnet.small"),
+        registry.scenario("hpc.amber.0"),
+    ]
+
+
+def test_suite_analysis_time_batch_bitwise(mixed_traces):
+    import itertools
+
+    suite = SuiteAnalysis(mixed_traces)
+    specs = [cfg.build() for cfg in copa.TABLE_V]
+    for flags in itertools.product((False, True), repeat=3):
+        kw = dict(zip(("ideal_dram", "ideal_mem_other", "ideal_occupancy"),
+                      flags))
+        totals = suite.time_batch(specs, **kw)
+        assert totals.shape == (len(specs), len(mixed_traces))
+        for i, t in enumerate(mixed_traces):
+            ta = TraceAnalysis(t, stream=suite.analyses[i].stream)
+            want = ta.time_batch(specs, **kw)
+            assert np.array_equal(totals[:, i], want), (flags, t.name)
+
+
+def test_suite_analysis_attribution_bitwise(mixed_traces):
+    suite = SuiteAnalysis(mixed_traces)
+    specs = [cfg.build() for cfg in copa.TABLE_V]
+    grid = suite.attribution_grid(specs)
+    for i, t in enumerate(mixed_traces):
+        ta = TraceAnalysis(t, stream=suite.analyses[i].stream)
+        want = ta.attribution_batch(specs)
+        for j in range(len(specs)):
+            assert grid[i][j][0] == want[j][0], (t.name, j)
+            assert grid[i][j][1] == want[j][1], (t.name, j)
+
+
+def test_suite_prefetch_batches_despite_warm_members(mixed_traces):
+    """A capacity one member already has cached must still be computed in
+    ONE batched scan for the rest — and the warm member keeps its object
+    (batch rows are bit-identical to it)."""
+    cap = 77.0 * MB
+    suite = SuiteAnalysis(mixed_traces)
+    warm = suite.analyses[0]
+    warm.prefetch([cap])  # per-trace warm-up of one member
+    pre = warm._levels[float(cap)]
+    calls = []
+    orig = suite.batch.traffic_matrices
+    suite.batch.traffic_matrices = lambda caps: calls.append(list(caps)) or orig(caps)
+    suite.prefetch([cap])
+    assert calls == [[cap]]  # exactly one batched scan, not N-1 per-trace
+    assert warm._levels[float(cap)] is pre  # warm member untouched
+    for i, ta in enumerate(suite.analyses[1:], start=1):
+        want = traffic_below(ta.stream, [cap])[0]
+        assert np.array_equal(ta._levels[float(cap)].fill, want.fill)
+        assert np.array_equal(ta._levels[float(cap)].writeback, want.writeback)
+
+
+def test_suite_analysis_dram_traffic_matches_per_trace(mixed_traces):
+    suite = SuiteAnalysis(mixed_traces)
+    mat = suite.dram_traffic(CAPS[:4])
+    assert mat.shape == (len(mixed_traces), 4)
+    for i, t in enumerate(mixed_traces):
+        per = TraceAnalysis(t, stream=suite.analyses[i].stream).dram_traffic(
+            CAPS[:4])
+        for k, c in enumerate(CAPS[:4]):
+            assert mat[i, k] == per[c]
+
+
+def test_dram_traffic_sweep_suite_matches_single():
+    traces = [registry.scenario(n)
+              for n in registry.suite("mlperf.infer.small")[:3]]
+    caps = [60 * MB, 960 * MB]
+    suite_out = dram_traffic_sweep_suite(traces, caps)
+    for t in traces:
+        single = dram_traffic_sweep(t, caps)
+        assert suite_out[t.name] == {float(c): single[c] for c in caps}
+
+
+def test_msm_analyze_suite_matches_single():
+    from repro.core import msm
+
+    traces = [registry.scenario("lm.tinyllama-1.1b.decode_32k"),
+              registry.scenario("lm.yi-6b.train_4k")]
+    batch = msm.analyze_suite(traces)
+    for t, got in zip(traces, batch):
+        want = msm.analyze(t)
+        assert got.trace_name == want.trace_name
+        assert got.baseline_traffic == want.baseline_traffic
+        assert got.sweep == want.sweep
+
+
+def test_perfmodel_batch_matches_single():
+    from repro.core import perfmodel
+
+    traces = [registry.scenario(n)
+              for n in registry.suite("mlperf.infer.small")[:3]]
+    spec = copa.HBM_L3.build()
+    models = perfmodel.PerfModel.batch(traces)
+    for t, pm in zip(traces, models):
+        one = perfmodel.PerfModel(t)
+        r_b, r_1 = pm.run(spec), one.run(spec)
+        assert r_b.time_s == r_1.time_s
+        assert r_b.segments == r_1.segments
+        assert r_b.dram_bytes == r_1.dram_bytes
+
+
+# --- the acceptance criterion: engine suite pass == per-trace loop ------------
+
+def _assert_grids_identical(g_bat, g_ref):
+    assert len(g_bat.rows) == len(g_ref.rows)
+    for rb, rr in zip(g_bat.rows, g_ref.rows):
+        assert dataclasses.asdict(rb) == dataclasses.asdict(rr), \
+            (rb.trace, rb.config, rb.n_gpus)
+    assert g_bat.llc_traffic == g_ref.llc_traffic
+
+
+def test_engine_batched_bit_identical_mixed_workloads():
+    """Scale-out families, serve scenarios, HPC and LM cells, extra LLC
+    capacities, a finite fabric — one suite pass, every row bit-identical
+    to the per-trace loop."""
+    works = (registry.suite("mlperf.train.small")[:2]
+             + ["scaleout.mlperf.train.resnet", "scaleout.serve.gnmt"]
+             + registry.scenarios("serve.mlperf.resnet")[:2]
+             + registry.suite("hpc")[:3]
+             + ["lm.tinyllama-1.1b.decode_32k"])
+    kw = dict(configs=copa.TABLE_V, gpu_counts=(1, 2, 4),
+              ici_bandwidth=600e9, extra_llc_capacities=[60 * MB, 960 * MB])
+    _assert_grids_identical(SweepEngine(works, **kw).run(),
+                            SweepEngine(works, **kw).run(batched=False))
+
+
+def test_engine_batched_bit_identical_full_default_suite():
+    """THE acceptance criterion: the full Fig-11 + Fig-12 + serve-grid
+    default suite through one suite-batched pass equals the pre-refactor
+    per-trace path bit for bit."""
+    works = ([n for s in ("mlperf.train.large", "mlperf.train.small",
+                          "mlperf.infer.large", "mlperf.infer.small")
+              for n in registry.suite(s)]
+             + registry.scaleout_names("scaleout.mlperf.train.")
+             + registry.scenarios("serve.mlperf."))
+    kw = dict(configs=copa.TABLE_V, gpu_counts=(1, 2, 4))
+    _assert_grids_identical(SweepEngine(works, **kw).run(),
+                            SweepEngine(works, **kw).run(batched=False))
+
+
+def test_serve_cost_grids_still_match_engine_rows():
+    """The suite-batched serve grid pricing must stay bit-identical to the
+    engine's serve rows (the PR-4 acceptance, now through SuiteAnalysis)."""
+    configs = [copa.GPU_N_BASE, copa.HBML_L3]
+    grids = serve_cost_grids("resnet", configs)
+    names = registry.scenarios("serve.mlperf.resnet.b")
+    grid = SweepEngine(names, configs=configs).run()
+    for name, g in grids.items():
+        for b in g.batches:
+            t = registry.scenario(f"serve.mlperf.resnet.b{b}").name
+            assert g.step_time(b) == grid.result(t, name).time_s
+
+
+# --- satellites ---------------------------------------------------------------
+
+def test_prefill_cost_per_token_prices_from_trace():
+    from repro.configs import SHAPES
+    from repro.core.sweep import analysis_for
+
+    configs = [copa.GPU_N_BASE, copa.HBML_L3]
+    per_tok = prefill_cost_per_token("lm.tinyllama-1.1b.prefill_32k", configs)
+    trace = registry.scenario("lm.tinyllama-1.1b.prefill_32k")
+    tokens = trace.batch_size * SHAPES["prefill_32k"].seq_len
+    want = analysis_for(trace).time_batch([c.build() for c in configs]) / tokens
+    assert np.array_equal(per_tok, want)
+    assert (per_tok > 0).all()
+    with pytest.raises(KeyError):
+        prefill_cost_per_token("lm.tinyllama-1.1b.decode_32k", configs)
+
+
+def test_serve_cost_grids_prefill_scenario():
+    configs = [copa.GPU_N_BASE, copa.HBML_L3]
+    scen = "lm.tinyllama-1.1b.prefill_32k"
+    grids = serve_cost_grids("gnmt", configs, tokens_per_pass=50,
+                             prefill_scenario=scen)
+    per_tok = prefill_cost_per_token(scen, configs)
+    for ci, c in enumerate(configs):
+        g = grids[c.name]
+        assert g.prefill_s_per_token == float(per_tok[ci])
+        # prefill_time scales linearly in prompt tokens from the real trace
+        assert g.prefill_time(100) == pytest.approx(100 * float(per_tok[ci]))
+    # flat-knob behaviour is unchanged when no scenario is given
+    flat = serve_cost_grids("gnmt", configs, tokens_per_pass=50,
+                            prefill_s_per_token=2e-7)
+    assert all(g.prefill_s_per_token == 2e-7 for g in flat.values())
+
+
+def test_registry_scenario_memoized_by_name():
+    calls = {"n": 0}
+
+    def factory():
+        calls["n"] += 1
+        tr = Trace("memo.probe")
+        tr.emit("op", 1.0, writes=[("t", MB)])
+        return tr
+
+    name = "test.memo.probe"
+    if name not in registry.names():
+        registry.register(name, factory)
+    a = registry.scenario(name)
+    b = registry.scenario(name)
+    c = registry.resolve(name)
+    assert a is b is c
+    assert calls["n"] == 1  # the factory ran exactly once
+
+
+def test_registry_suite_analysis_entry():
+    suite = registry.suite_analysis("mlperf.infer.small")
+    assert suite.n_traces == len(registry.suite("mlperf.infer.small"))
+    assert suite is suite_analysis_for(
+        registry.suite_traces("mlperf.infer.small"))  # shared process cache
+    glob = registry.suite_analysis("hpc.amber.*")
+    assert glob.n_traces == len(registry.match("hpc.amber.*"))
+    with pytest.raises(KeyError):
+        registry.suite_analysis("no.such.suite")
+
+
+# The randomized-property variant of this suite lives in
+# tests/test_suite_properties.py (hypothesis importorskip-guarded, like the
+# serving property suite); everything above runs without hypothesis.

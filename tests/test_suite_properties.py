@@ -1,0 +1,69 @@
+"""Hypothesis property tests for suite-level batching: over randomized
+traces, capacities, and padding amounts (mixed stream lengths inside one
+StreamBatch), the batched scan must equal per-trace `traffic_below` /
+`TraceAnalysis` bit for bit and track the per-touch reference oracle.
+
+Fixed-seed deterministic variants of these invariants run without
+hypothesis in tests/test_suite_batch.py.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import copa
+from repro.core.cachesim import (
+    StreamBatch,
+    _reference_traffic_below,
+    build_streams,
+    traffic_below,
+)
+from repro.core.hw import MB
+from repro.core.sweep import SuiteAnalysis, TraceAnalysis
+from test_suite_batch import _random_suite
+
+
+@st.composite
+def trace_suite(draw):
+    """A small suite of randomized traces with varying lengths (and hence
+    varying padding amounts inside the StreamBatch)."""
+    n_traces = draw(st.integers(min_value=1, max_value=6))
+    seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+    max_ops = draw(st.sampled_from([4, 20, 60]))
+    rng = np.random.default_rng(seed)
+    return _random_suite(rng, n_traces, max_ops=max_ops)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    traces=trace_suite(),
+    caps=st.lists(st.floats(min_value=0.5, max_value=2000.0),
+                  min_size=1, max_size=5, unique=True),
+)
+def test_property_stream_batch_equals_per_trace(traces, caps):
+    caps = [c * MB for c in caps]
+    streams = build_streams(traces)
+    batch = StreamBatch.pad(streams)
+    got = batch.traffic_below(caps)
+    for i, s in enumerate(streams):
+        want = traffic_below(s, caps)
+        ref = _reference_traffic_below(s, caps)
+        for k in range(len(caps)):
+            assert np.array_equal(got[i][k].fill, want[k].fill)
+            assert np.array_equal(got[i][k].writeback, want[k].writeback)
+            assert np.allclose(got[i][k].fill, ref[k].fill,
+                               rtol=1e-9, atol=1e-3)
+            assert np.allclose(got[i][k].writeback, ref[k].writeback,
+                               rtol=1e-9, atol=1e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(traces=trace_suite())
+def test_property_suite_time_model_equals_per_trace(traces):
+    suite = SuiteAnalysis(traces)
+    specs = [copa.GPU_N_BASE.build(), copa.HBML_L3.build()]
+    totals = suite.time_batch(specs)
+    for i, t in enumerate(traces):
+        ta = TraceAnalysis(t, stream=suite.analyses[i].stream)
+        assert np.array_equal(totals[:, i], ta.time_batch(specs))
