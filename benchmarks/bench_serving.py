@@ -4,15 +4,25 @@
 CI smoke step asserts nothing here — determinism means any drift shows up
 as a diff against the recorded derived strings) and times the hot paths:
 cost-grid export, the single-instance event loop at saturation, and the
-fleet SLO scan. ``BENCH_serving.json`` records the us-per-call snapshot.
+fleet SLO scan. ``serving.fleet.*`` times the vectorized fleet core
+(`repro.serve.fleetbatch`) against the per-instance heap oracle on the
+same stream — identical results, so the derived speedup is pure engine
+cost; the 64x20k row ASSERTS speedup >= 5x (the CI floor; the recorded
+number targets >= 10x). ``BENCH_serving.json`` records the us-per-call
+snapshot.
 """
 from __future__ import annotations
 
+import gc
+import time
+
+import numpy as np
+
 from benchmarks.common import Csv, timed
 from repro.core import copa
-from repro.core.sweep import SweepEngine, serve_cost_grids
-from repro.serve.fleet import instances_to_meet_slo
-from repro.serve.sim import ArrivalSpec, Request, Slo, simulate
+from repro.core.sweep import CostGrid, SweepEngine, serve_cost_grids
+from repro.serve.fleet import FleetSim, instances_to_meet_slo
+from repro.serve.sim import ArrivalSpec, LengthDist, Request, Slo, simulate
 
 BENCH = "resnet"
 CONFIGS = [copa.GPU_N_BASE, copa.HBM_L3]
@@ -73,4 +83,89 @@ def bench_serving_smoke(csv: Csv):
                 us / len(sizes), f"{n} @2.2x sat")
 
 
-ALL = [bench_serving_smoke]
+def _fleet_bench_grid(max_batch: int = 16) -> CostGrid:
+    """Synthetic grid with batch- and KV-dependent step times — cheap to
+    build, exercises every grid-pricing path of both fleet engines."""
+    batches = tuple(2 ** k for k in range(max_batch.bit_length() - 1 + 1))
+    edges = (2048.0, 8192.0, float("inf"))
+    tab = np.asarray([[1e-3 * (1.0 + 0.02 * b + 0.05 * j)
+                       for j in range(len(edges))] for b in batches])
+    return CostGrid("fleet-bench", batches, edges, tab,
+                    prefill_s_per_token=1e-6)
+
+
+def _best_of(fn, reps: int = 3):
+    # timeit-style: GC off while timing so collection pauses (seeded by
+    # whatever the earlier benches left alive) don't land in one engine's
+    # column
+    best, out = float("inf"), None
+    was_enabled = gc.isenabled()
+    gc.disable()
+    try:
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            out = fn()
+            best = min(best, time.perf_counter() - t0)
+    finally:
+        if was_enabled:
+            gc.enable()
+    return out, best * 1e6
+
+
+def bench_serving_fleet(csv: Csv):
+    mb, out_mean = 16, 32.0
+    grid = _fleet_bench_grid(mb)
+    step = float(grid.step_time(mb, 4096.0))
+
+    for n_inst, n_req in ((8, 5_000), (64, 20_000)):
+        # 0.8x fleet saturation: queues form and drain, batches stay full.
+        # LLM-decode-shaped outputs (mean 64 tokens) give every request a
+        # long step chain — the regime the per-instance oracle is worst at
+        # (O(batch) python work per step vs the batched core's O(1))
+        rate = n_inst * 0.8 * mb / (step * 64.0)
+        spec = ArrivalSpec("fleet.bench", rate, n_req,
+                           prompt=LengthDist("fixed", 128),
+                           output=LengthDist("uniform", low=32, high=96))
+        kw = dict(max_batch=mb, kv_capacity_tokens=float("inf"))
+
+        rb, us_b = _best_of(
+            lambda: FleetSim(grid, n_inst, **kw).run(spec, seed=SEED))
+        ro, us_o = _best_of(
+            lambda: FleetSim(grid, n_inst, **kw).run(spec, seed=SEED,
+                                                     batched=False))
+        if not (np.array_equal(rb.batch.t_done, ro.batch.t_done)
+                and np.array_equal(rb.batch.t_first_token,
+                                   ro.batch.t_first_token)):
+            raise AssertionError(
+                f"fleet engines diverged at {n_inst}x{n_req}")
+        speedup = us_o / us_b
+        tag = f"{n_inst}x{n_req // 1000}k"
+        csv.add(f"serving.fleet.batched_{tag}", us_b,
+                f"{speedup:.1f}x vs oracle")
+        csv.add(f"serving.fleet.oracle_{tag}", us_o,
+                f"{len(rb.step_logs)} logs, identical results")
+        if n_inst == 64:
+            # CI floor: the vectorized core must hold at least 5x on the
+            # flagship row (recorded speedups target >= 10x)
+            assert speedup >= 5.0, \
+                f"fleet speedup regressed to {speedup:.1f}x (< 5x floor)"
+
+    # planet-scale sizing: bisect a 256-instance ladder (O(log N) batched
+    # runs) for a mixed-rate bursty stream — the workflow the vectorized
+    # core exists for
+    heavy = ArrivalSpec("fleet.heavy", 180 * 0.8 * mb / (step * out_mean),
+                        20_000, burst_factor=3.0, burst_fraction=0.25,
+                        period_s=2.0, prompt=LengthDist("fixed", 128),
+                        output=LengthDist("uniform", low=16, high=48))
+    slo = Slo(ttft_s=50 * step, tpot_s=5 * step, percentile=95)
+
+    def size():
+        return instances_to_meet_slo(grid, heavy, slo, max_batch=mb,
+                                     max_instances=256, seed=SEED,
+                                     strategy="bisect")
+
+    n, us = timed(size)
+    csv.add("serving.fleet.size_256ladder", us, f"{n} instances @p95")
+
+
+ALL = [bench_serving_smoke, bench_serving_fleet]

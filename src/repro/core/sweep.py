@@ -862,6 +862,13 @@ class CostGrid:
             raise ValueError("seq_edges must be ascending and unique")
         if self.step_time_s.shape != (len(self.batches), len(self.seq_edges)):
             raise ValueError("step_time_s shape mismatch")
+        # cache the lookup arrays once — step_time() is the hottest call in
+        # the serving simulators and np.searchsorted over a tuple would
+        # otherwise rebuild an ndarray on every step
+        object.__setattr__(self, "_batches_arr",
+                           np.asarray(self.batches, dtype=np.int64))
+        object.__setattr__(self, "_edges_arr",
+                           np.asarray(self.seq_edges, dtype=float))
 
     @property
     def max_batch(self) -> int:
@@ -872,8 +879,9 @@ class CostGrid:
         if np.any(b < 1) or np.any(b > self.max_batch):
             raise ValueError(
                 f"batch outside priced range [1, {self.max_batch}]: {batch!r}")
-        i = np.searchsorted(self.batches, b, side="left")
-        j = np.minimum(np.searchsorted(self.seq_edges, np.asarray(resident_tokens),
+        i = np.searchsorted(self._batches_arr, b, side="left")
+        j = np.minimum(np.searchsorted(self._edges_arr,
+                                       np.asarray(resident_tokens),
                                        side="left"),
                        len(self.seq_edges) - 1)
         out = self.step_time_s[i, j]

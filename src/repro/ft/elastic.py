@@ -70,6 +70,11 @@ class QueueDepthAutoscaler:
 
     def decide(self, n_active: int, queued: int, running: int,
                max_batch: int) -> int:
+        # Both fleet engines (the per-instance oracle and the vectorized
+        # core in ``repro.serve.fleetbatch``) call this at autoscale ticks;
+        # coerce observations so numpy scalars from the batched engine and
+        # plain ints from the oracle drive bit-identical decisions.
+        n_active, queued, running = int(n_active), int(queued), int(running)
         capacity = max(n_active, 1) * max_batch
         growing = self._last_queued < 0 or queued >= self._last_queued
         self._last_queued = float(queued)

@@ -2,15 +2,25 @@
 
 Answers the paper's scale-out question at the request level: how many
 instances of a COPA config does a latency-bounded service need?
-:class:`FleetSim` runs one global discrete-event loop over N
-:class:`~repro.serve.sim.Instance` states — arrivals are dispatched by a
-router (``round_robin`` or ``least_loaded``), each instance schedules its
-own continuous-batching iterations, and an optional autoscaler (queue-depth
-policy from ``repro.ft.elastic``) resizes the fleet at a fixed cadence.
+:class:`FleetSim` runs one global discrete-event loop over N instances —
+arrivals are dispatched by a router (``round_robin`` or ``least_loaded``),
+each instance schedules its own continuous-batching iterations, and an
+optional autoscaler (queue-depth policy from ``repro.ft.elastic``) resizes
+the fleet at a fixed cadence.
+
+Two engines share these semantics: the default is the vectorized
+struct-of-arrays core in ``repro.serve.fleetbatch`` (requests as
+:class:`~repro.serve.sim.RequestBatch` columns, instances as rows of one
+event state — planet-scale fleets price in seconds); ``run(batched=False)``
+keeps the original per-instance :class:`~repro.serve.sim.Instance`/heap
+loop as the parity oracle, asserted bit-identical in tests.
 
 :func:`instances_to_meet_slo` is the SLO-percentile analogue of
 ``SweepGrid.instances_to_target``: the smallest fleet whose simulated
 latency percentiles meet the :class:`~repro.serve.sim.Slo`.
+:func:`scan_fleet` finds it by doubling + bisection — each probe is one
+batched run over the SAME generated request stream, so a 200+-instance
+answer costs ~log2(N) simulations instead of N.
 """
 from __future__ import annotations
 
@@ -22,6 +32,7 @@ from repro.serve.sim import (
     ArrivalSpec,
     Instance,
     Request,
+    RequestBatch,
     SimMetrics,
     Slo,
     StepLog,
@@ -41,11 +52,19 @@ class ScaleEvent:
 
 @dataclass
 class FleetResult:
-    requests: list[Request]
+    batch: RequestBatch               # per-request timings, SoA, arrival-sorted
     metrics: SimMetrics
     step_logs: list[StepLog]          # one per instance ever active
     n_instances_final: int            # active (non-draining) at completion
     scale_events: list[ScaleEvent] = field(default_factory=list)
+
+    @property
+    def requests(self) -> list[Request]:
+        """Per-request objects, materialized from the SoA batch on demand
+        (the batched core never builds them)."""
+        if getattr(self, "_requests", None) is None:
+            self._requests = self.batch.to_requests()
+        return self._requests
 
     @property
     def n_instances_peak(self) -> int:
@@ -112,10 +131,27 @@ class FleetSim:
         return min(self._active, key=lambda i: i.load)
 
     # -- the global event loop -------------------------------------------------
-    def run(self, requests: Sequence[Request] | ArrivalSpec,
-            seed: int = 0) -> FleetResult:
+    def run(self, requests: Sequence[Request] | ArrivalSpec | RequestBatch,
+            seed: int = 0, *, batched: bool = True) -> FleetResult:
+        if batched:
+            from repro.serve import fleetbatch  # lazy: avoids import cycle
+
+            if isinstance(requests, ArrivalSpec):
+                rb = requests.generate_batch(seed)
+            elif isinstance(requests, RequestBatch):
+                rb = requests
+            else:
+                rb = RequestBatch.from_requests(requests)
+            return fleetbatch.run_fleet(
+                self.cost, rb, n_instances=len(self._active),
+                router=self.router, max_batch=self.max_batch,
+                kv_capacity_tokens=self.kv_capacity_tokens,
+                autoscaler=self.autoscaler,
+                autoscale_interval_s=self.autoscale_interval_s)
         if isinstance(requests, ArrivalSpec):
             requests = requests.generate(seed)
+        elif isinstance(requests, RequestBatch):
+            requests = requests.to_requests()
         # copy: a shared request list (replayed trace) must not carry one
         # run's timing state into the next (scan_fleet reuses the list)
         reqs = fresh_requests(requests)
@@ -182,40 +218,84 @@ class FleetSim:
         assert done == len(reqs) and leftovers == 0, "requests left in system"
         logs = [i.step_log() for i in
                 self._active + self._draining + self._retired]
-        return FleetResult(
-            requests=reqs,
+        out = FleetResult(
+            batch=RequestBatch.from_completed(reqs),
             metrics=SimMetrics.from_requests(reqs),
             step_logs=logs,
             n_instances_final=len(self._active),
             scale_events=scale_events,
         )
+        out._requests = reqs
+        return out
 
 
-def scan_fleet(cost, arrivals: ArrivalSpec | Sequence[Request], slo: Slo, *,
+def scan_fleet(cost, arrivals: ArrivalSpec | Sequence[Request] | RequestBatch,
+               slo: Slo, *,
                router: str = "least_loaded", max_batch: int | None = None,
                kv_capacity_tokens: float = float("inf"),
-               max_instances: int = 64, seed: int = 0
+               max_instances: int = 64, seed: int = 0,
+               batched: bool = True, strategy: str = "bisect"
                ) -> dict[int, SimMetrics]:
-    """Simulate fleets of 1..N instances until the SLO is met (or the cap is
-    hit); returns metrics per fleet size tried."""
-    out: dict[int, SimMetrics] = {}
-    for n in range(1, max_instances + 1):
-        sim = FleetSim(cost, n, router=router, max_batch=max_batch,
+    """Probe fleet sizes until the smallest SLO-meeting size is bracketed;
+    returns metrics for every size probed.
+
+    The request stream is generated ONCE and re-run fresh per probe, so
+    every probed size sees the identical arrival trace. ``strategy`` picks
+    the probe schedule: ``"bisect"`` (default) doubles 1, 2, 4, ... to the
+    first SLO-meeting size then bisects the bracket — O(log N) batched runs,
+    which is what makes 200+-instance sizing cheap; ``"linear"`` is the
+    original 1..N scan (kept for parity tests — both schedules land on the
+    same :func:`instances_to_meet_slo` answer whenever SLO attainment is
+    monotone in fleet size, asserted in tests)."""
+    if strategy not in ("bisect", "linear"):
+        raise ValueError(f"unknown strategy {strategy!r}")
+    if isinstance(arrivals, ArrivalSpec):
+        base = arrivals.generate_batch(seed) if batched \
+            else arrivals.generate(seed)
+    else:
+        base = arrivals   # FleetSim.run re-materializes fresh copies
+
+    def probe(k: int) -> SimMetrics:
+        sim = FleetSim(cost, k, router=router, max_batch=max_batch,
                        kv_capacity_tokens=kv_capacity_tokens)
-        out[n] = sim.run(arrivals, seed=seed).metrics
-        if slo.met(out[n]):
+        return sim.run(base, seed=seed, batched=batched).metrics
+
+    out: dict[int, SimMetrics] = {}
+    if strategy == "linear":
+        for k in range(1, max_instances + 1):
+            out[k] = probe(k)
+            if slo.met(out[k]):
+                break
+        return out
+    k, lo = 1, 0
+    while True:                       # doubling: find the first met size
+        out[k] = probe(k)
+        if slo.met(out[k]):
             break
+        if k >= max_instances:
+            return out                # even the cap falls short
+        lo, k = k, min(2 * k, max_instances)
+    hi = k
+    while hi - lo > 1:                # bisect the (fail, met] bracket
+        mid = (lo + hi) // 2
+        out[mid] = probe(mid)
+        if slo.met(out[mid]):
+            hi = mid
+        else:
+            lo = mid
     return out
 
 
-def instances_to_meet_slo(cost, arrivals: ArrivalSpec | Sequence[Request],
+def instances_to_meet_slo(cost,
+                          arrivals: ArrivalSpec | Sequence[Request]
+                          | RequestBatch,
                           slo: Slo, **kw) -> int | None:
     """Smallest fleet size whose simulated percentiles meet ``slo`` (None
     when even ``max_instances`` falls short) — the SLO analogue of
     ``SweepGrid.instances_to_target``."""
     scanned = scan_fleet(cost, arrivals, slo, **kw)
-    n = max(scanned)
-    return n if slo.met(scanned[n]) else None
+    met = [k for k, m in scanned.items() if slo.met(m)]
+    return min(met) if met else None
 
 
 def latency_goodput_rows(grids: dict[str, "object"], arrivals: ArrivalSpec,

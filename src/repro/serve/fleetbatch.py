@@ -1,0 +1,616 @@
+"""Vectorized fleet core: the whole fleet as struct-of-arrays event state.
+
+``repro.serve.fleet.FleetSim`` answers the paper's scale-out question at the
+request level, but its per-instance loop walks Python ``Request`` objects —
+O(batch) attribute churn per engine iteration — which caps it at tens of
+instances. This module re-runs the SAME discrete-event semantics with fleet
+state as arrays (the batched-scan-over-rows move ``StreamBatch`` made for
+traces): requests are the columns of a :class:`~repro.serve.sim.RequestBatch`
+and instances are rows of scalar event state, so a 500-instance
+100k-request diurnal run prices in seconds instead of minutes.
+
+What makes it fast — and still bit-identical to the oracle:
+
+* **Arrivals are a sorted array + pointer, not heap entries.** Only step
+  completions and autoscale ticks live in the heap; arrival events always
+  outrank same-timestamp heap events (their sequence numbers are smaller,
+  exactly as the oracle pushes them), so wave ordering is preserved.
+* **O(1) step state via admission-step aggregates.** A request admitted at
+  instance step ``k`` has emitted ``step - k`` tokens ever after, so the
+  resident-KV sum the cost model needs is the closed form
+  ``sum_prompt + batch * step - sum_admit_step`` — three counters updated
+  only at admission/completion, never a per-request sweep per iteration.
+* **Completions are pre-bucketed by step index.** Admission at step ``k``
+  of a request with ``o`` output tokens schedules its completion at step
+  ``k + o - 1``; each step-finish pops one bucket (ids + aggregate sums)
+  instead of scanning the running batch.
+* **Waves batch the pricing.** All events at one timestamp drain first
+  (simultaneous arrivals share batches, as in the oracle); every instance
+  the wave kicked then prices its next iteration through ONE vectorized
+  :meth:`~repro.core.sweep.CostGrid.step_time` call, with a bisect-based
+  scalar fast path when the wave touched a single instance.
+* **FIFO admission uses a vectorized KV-reservation prefix check** — a
+  cumulative-sum + ``searchsorted`` over the waiting head region — when the
+  candidate window is wide, and an amortized-O(1) scalar walk otherwise.
+
+``repro.serve.fleet.FleetSim.run`` dispatches here by default; the
+per-instance ``Instance``/heap loop survives behind ``run(batched=False)``
+as the parity oracle, asserted request-for-request bit-identical (timings,
+step logs, scale events) in ``tests/test_fleet_batch.py``.
+"""
+from __future__ import annotations
+
+import heapq
+import math
+from bisect import bisect_left
+
+import numpy as np
+
+from repro.serve.sim import RequestBatch, SimMetrics, StepLog
+
+# Below this many candidates/completions the scalar path beats numpy-call
+# overhead; both paths are exact, so the cutover is pure perf.
+_VEC_CUTOVER = 8
+
+
+def _scalar_pricer(cost):
+    """(step_time, prefill_time, grid_like, per_tok) with a pure-Python
+    bisect fast path for ``CostGrid``-shaped costs — identical table
+    lookups, no per-step numpy call overhead. ``per_tok`` is the grid's
+    prefill seconds/token (None for non-grid costs), so hot loops can
+    inline the multiply instead of calling ``prefill_time``."""
+    grid_like = (hasattr(cost, "step_time_s") and hasattr(cost, "batches")
+                 and hasattr(cost, "seq_edges"))
+    if not grid_like:
+        return cost.step_time, cost.prefill_time, False, None
+    batches = list(cost.batches)
+    edges = list(cost.seq_edges)
+    table = np.asarray(cost.step_time_s).tolist()   # exact float64 values
+    max_b, last_j = batches[-1], len(edges) - 1
+
+    def step_time(batch, resident):
+        if batch < 1 or batch > max_b:
+            raise ValueError(
+                f"batch outside priced range [1, {max_b}]: {batch!r}")
+        j = bisect_left(edges, resident)
+        return table[bisect_left(batches, batch)][
+            j if j < last_j else last_j]
+
+    per_tok = float(getattr(cost, "prefill_s_per_token", 0.0))
+
+    def prefill_time(prompt_tokens):
+        return prompt_tokens * per_tok
+
+    return step_time, prefill_time, True, per_tok
+
+
+def run_fleet(cost, batch: RequestBatch, *, n_instances: int = 1,
+              router: str = "least_loaded", max_batch: int | None = None,
+              kv_capacity_tokens: float = float("inf"),
+              autoscaler=None, autoscale_interval_s: float = 0.0):
+    """One batched fleet run over ``batch`` (consumed via a fresh copy).
+
+    Semantics are exactly ``FleetSim.run(batched=False)``; see the module
+    docstring for the vectorization strategy. Returns a
+    :class:`~repro.serve.fleet.FleetResult`.
+    """
+    from repro.serve.fleet import ROUTERS, FleetResult, ScaleEvent
+
+    if router not in ROUTERS:
+        raise ValueError(f"unknown router {router!r}; one of {ROUTERS}")
+    if n_instances < 1:
+        raise ValueError("n_instances must be >= 1")
+    if autoscaler is not None and autoscale_interval_s <= 0:
+        raise ValueError("autoscaler needs autoscale_interval_s > 0")
+    mb = int(max_batch if max_batch is not None else cost.max_batch)
+    if mb < 1:
+        raise ValueError("max_batch must be >= 1")
+    cap = float(kv_capacity_tokens)
+    interval = float(autoscale_interval_s)
+    round_robin = router == "round_robin"
+
+    b = batch.fresh()
+    n = len(b)
+    t_admitted, t_first, t_done = b.t_admitted, b.t_first_token, b.t_done
+    tokens_emitted = b.tokens_emitted
+    outputs = b.output_tokens
+    # python lists: ~30ns scalar reads in the hot loop vs numpy item access
+    t_arr_l = b.t_arrival.tolist()
+    rid_l = b.rid.tolist()
+    prompt_l = b.prompt_tokens.tolist()
+    out_l = outputs.tolist()
+    kv_arr = b.kv_tokens
+    kv_l = kv_arr.tolist()
+
+    step_scalar, prefill_scalar, grid_like, per_tok = _scalar_pricer(cost)
+    if grid_like:      # hot loops inline the table lookup (no call overhead)
+        g_batches = list(cost.batches)
+        g_edges = list(cost.seq_edges)
+        g_table = np.asarray(cost.step_time_s).tolist()
+        g_maxb, g_lastj = g_batches[-1], len(g_edges) - 1
+        # validate once so grid-priced steps skip the per-step dt check
+        # (a grid cell + non-negative finite prefill is always a valid dt)
+        for row_ in g_table:
+            for v in row_:
+                if not (v > 0 and math.isfinite(v)):
+                    raise ValueError(
+                        f"non-positive/non-finite step time {v!r}")
+        if not (per_tok >= 0 and math.isfinite(per_tok)):
+            raise ValueError(
+                f"non-finite/negative prefill_s_per_token {per_tok!r}")
+        # direct batch-size -> table-row map (batch rounds UP to the next
+        # priced size) so the per-step lookup is one list index + one bisect
+        g_row = [None] + [g_table[bisect_left(g_batches, bb)]
+                          for bb in range(1, g_maxb + 1)]
+
+    # -- per-instance event state (index = instance id, rows of the fleet) -----
+    busy: list[bool] = []
+    kvres: list[float] = []          # reserved KV tokens (int-valued float)
+    nrun: list[int] = []             # running batch size
+    sum_p: list[int] = []            # sum of running prompts
+    sum_as: list[int] = []           # sum of running admission step indices
+    kstep: list[int] = []            # steps started
+    wait_q: list[list[int]] = []     # FIFO waiting rows...
+    wait_h: list[int] = []           # ...consumed from a head pointer
+    buckets: list[dict[int, list]] = []  # finish step -> [rows, cnt, Σp, Σk, Σkv]
+    logs: list[list[tuple]] = []
+    load: list[int] = []                 # waiting + running, per instance id
+
+    active: list[int] = []
+    draining: list[int] = []
+    draining_set: set[int] = set()
+    retire_records: list[tuple[float, int]] = []   # (t_retired, instance)
+    # routing state: loads of ACTIVE instances, compact and position-aligned
+    # with `active` so least-loaded is one argmin (no fancy indexing);
+    # posl[i] is instance i's position in `active` (-1 when not active)
+    load_act = np.zeros(0, dtype=np.int64)
+    posl: list[int] = []
+
+    def rebuild_active() -> None:
+        nonlocal load_act
+        load_act = np.asarray([load[i] for i in active], dtype=np.int64)
+        for idx in range(len(posl)):
+            posl[idx] = -1
+        for p, i in enumerate(active):
+            posl[i] = p
+
+    def spawn() -> None:
+        i = len(busy)
+        busy.append(False); kvres.append(0.0); nrun.append(0)
+        sum_p.append(0); sum_as.append(0); kstep.append(0)
+        wait_q.append([]); wait_h.append(0)
+        buckets.append({}); logs.append([])
+        load.append(0)
+        posl.append(-1)
+        active.append(i)
+
+    def drain_one(now: float) -> None:
+        if len(active) <= 1:
+            return
+        i = active.pop(int(load_act.argmin()))
+        rebuild_active()
+        if not busy[i] and load[i] == 0:
+            retire_records.append((now, i))
+        else:
+            draining.append(i)
+            draining_set.add(i)
+
+    for _ in range(n_instances):
+        spawn()
+    rebuild_active()
+
+    def admit(i: int, now: float) -> tuple[list[int], float]:
+        """FIFO admission bounded by batch slots and the KV-reservation
+        prefix (no skipping past a blocked head) — the oracle's ``_admit``.
+        Returns (admitted rows, their summed prefill time)."""
+        h, w = wait_h[i], wait_q[i]
+        lim = len(w) - h
+        slots = mb - nrun[i]
+        if slots < lim:
+            lim = slots
+        if lim <= 0:
+            return (), 0.0
+        cap_left = cap - kvres[i]
+        if lim <= _VEC_CUTOVER:
+            m, acc = 0, 0
+            while m < lim:
+                kv = kv_l[w[h + m]]
+                if acc + kv > cap_left:
+                    break
+                acc += kv
+                m += 1
+        else:
+            # vectorized prefix check: largest m with cumsum(kv) <= budget
+            csum = np.cumsum(kv_arr[w[h:h + lim]])
+            m = int(np.searchsorted(csum, cap_left, side="right"))
+        if m == 0:
+            return (), 0.0
+        rows = w[h:h + m]
+        wait_h[i] = h + m
+        if h + m > 512 and (h + m) * 2 >= len(w):
+            del w[:h + m]
+            wait_h[i] = 0
+        if m <= _VEC_CUTOVER:
+            for r in rows:
+                t_admitted[r] = now
+        else:
+            t_admitted[rows] = now
+        k = kstep[i]
+        tot_kv = tot_p = 0
+        prefill = 0.0
+        bks = buckets[i]
+        for r in rows:
+            fk = k + out_l[r] - 1          # the step whose end completes r
+            bkt = bks.get(fk)
+            if bkt is None:
+                bks[fk] = bkt = [[], 0, 0, 0, 0]
+            bkt[0].append(r)
+            bkt[1] += 1
+            p = prompt_l[r]
+            bkt[2] += p
+            bkt[3] += k
+            bkt[4] += kv_l[r]
+            tot_kv += kv_l[r]
+            tot_p += p
+            # oracle order: per-request prefill times summed left-to-right
+            prefill += p * per_tok if per_tok is not None \
+                else prefill_scalar(p)
+        kvres[i] += tot_kv
+        nrun[i] += m
+        sum_p[i] += tot_p
+        sum_as[i] += m * k
+        return rows, prefill
+
+    # -- the global event loop -------------------------------------------------
+    # Steps live in the heap as (t_end, seq, instance); arrivals stay a
+    # sorted array + pointer and the (single) pending autoscale tick is a
+    # scalar. At equal timestamps arrivals outrank everything (seqs 0..n-1,
+    # exactly the order the oracle pushed them) and step/tick events
+    # interleave by seq — the oracle's heap order.
+    INF = float("inf")
+    heap: list[tuple[float, int, int]] = []
+    seq = n          # arrivals implicitly hold seqs 0..n-1 (array order)
+    arr_ptr = 0
+    done = 0
+    clock = 0.0
+    rr = 0
+    scale_events: list[ScaleEvent] = []
+    tick_pending = False
+    next_tick, tick_seq = INF, -1
+    if autoscaler is not None and n:
+        tick_pending, next_tick, tick_seq = True, t_arr_l[0] + interval, seq
+        seq += 1
+
+    while (arr_ptr < n or heap or tick_pending) and done < n:
+        Ta = t_arr_l[arr_ptr] if arr_ptr < n else INF
+        Tt = next_tick if tick_pending else INF
+        T = Ta if Ta <= Tt else Tt
+        # Fast-forward: between interaction points (arrivals / autoscale
+        # ticks) instances are independent, so run each popped instance's
+        # finish->admit->start chain privately until it crosses T or goes
+        # idle — no heap churn or wave scaffolding per step. Steps landing
+        # exactly ON T stay in the heap for the wave below, preserving the
+        # oracle's ordering against same-timestamp arrivals and ticks.
+        while heap and heap[0][0] < T:
+            tcur, _, i = heapq.heappop(heap)
+            # Chain-local scalars (written back after the chain): between
+            # interaction points no other instance can observe this state,
+            # and the chain was popped busy so ``busy[i]`` stays True
+            # unless the instance retires or idles out.
+            bks = buckets[i]
+            logs_i = logs[i]
+            w = wait_q[i]
+            k_i = kstep[i]
+            nr = nrun[i]
+            sp_i = sum_p[i]
+            sa_i = sum_as[i]
+            kvr = kvres[i]
+            h = wait_h[i]
+            ld = load[i]
+            pp = posl[i]
+            drn = i in draining_set
+            while True:
+                bkt = bks.pop(k_i - 1, None)
+                if bkt is not None:
+                    rows, cnt, sp, sa, skv = bkt
+                    if cnt <= _VEC_CUTOVER:
+                        for r in rows:
+                            t_done[r] = tcur
+                            tokens_emitted[r] = out_l[r]
+                    else:
+                        t_done[rows] = tcur
+                        tokens_emitted[rows] = outputs[rows]
+                    nr -= cnt
+                    sp_i -= sp
+                    sa_i -= sa
+                    kvr -= skv
+                    ld -= cnt
+                    if pp >= 0:
+                        load_act[pp] -= cnt
+                    done += cnt
+                if drn and ld == 0:
+                    draining.remove(i)
+                    draining_set.discard(i)
+                    retire_records.append((tcur, i))
+                    busy[i] = False
+                    break
+                # admit(), inlined — this is the engine's hottest block
+                lim = len(w) - h
+                slots = mb - nr
+                if slots < lim:
+                    lim = slots
+                m = 0
+                if lim > 0:
+                    cap_left = cap - kvr
+                    if lim <= _VEC_CUTOVER:
+                        acc = 0
+                        while m < lim:
+                            kv = kv_l[w[h + m]]
+                            if acc + kv > cap_left:
+                                break
+                            acc += kv
+                            m += 1
+                    else:
+                        csum = np.cumsum(kv_arr[w[h:h + lim]])
+                        m = int(np.searchsorted(csum, cap_left,
+                                                side="right"))
+                prefill = 0.0
+                if m:
+                    rows = w[h:h + m]
+                    h += m
+                    if h > 512 and h * 2 >= len(w):
+                        del w[:h]
+                        h = 0
+                    if m <= _VEC_CUTOVER:
+                        for r in rows:
+                            t_admitted[r] = tcur
+                    else:
+                        t_admitted[rows] = tcur
+                    tot_kv = tot_p = 0
+                    for r in rows:
+                        fk = k_i + out_l[r] - 1
+                        bkt = bks.get(fk)
+                        if bkt is None:
+                            bks[fk] = bkt = [[], 0, 0, 0, 0]
+                        bkt[0].append(r)
+                        bkt[1] += 1
+                        p = prompt_l[r]
+                        bkt[2] += p
+                        bkt[3] += k_i
+                        bkt[4] += kv_l[r]
+                        tot_kv += kv_l[r]
+                        tot_p += p
+                        prefill += p * per_tok if per_tok is not None \
+                            else prefill_scalar(p)
+                    kvr += tot_kv
+                    nr += m
+                    sp_i += tot_p
+                    sa_i += m * k_i
+                else:
+                    rows = ()
+                if nr == 0:
+                    busy[i] = False
+                    break
+                resident = sp_i + nr * k_i - sa_i
+                if grid_like:
+                    if nr > g_maxb:
+                        raise ValueError(
+                            f"batch outside priced range [1, {g_maxb}]: "
+                            f"{nr!r}")
+                    j = bisect_left(g_edges, resident)
+                    dt = g_row[nr][j if j < g_lastj else g_lastj] + prefill
+                else:
+                    dt = step_scalar(nr, resident) + prefill
+                    if not (dt > 0 and math.isfinite(dt)):
+                        raise ValueError(
+                            f"non-positive/non-finite step time {dt!r}")
+                t_end = tcur + dt
+                logs_i.append((tcur, t_end, nr, kvr, len(w) - h, m))
+                if m:
+                    if m <= _VEC_CUTOVER:
+                        for r in rows:
+                            t_first[r] = t_end
+                    else:
+                        t_first[rows] = t_end
+                k_i += 1
+                sq = seq
+                seq += 1
+                if t_end >= T:
+                    heapq.heappush(heap, (t_end, sq, i))
+                    break
+                tcur = t_end
+            kstep[i] = k_i
+            nrun[i] = nr
+            sum_p[i] = sp_i
+            sum_as[i] = sa_i
+            kvres[i] = kvr
+            wait_h[i] = h
+            load[i] = ld
+        if T == INF or done >= n:
+            break      # oracle exits before a pending tick once all done
+        assert T >= clock, "fleet clock went backwards"
+        clock = T
+        # Lone arrival (the common wave) — route + submit + start inline.
+        if (Ta < Tt and (not heap or heap[0][0] != Ta)
+                and (arr_ptr + 1 == n or t_arr_l[arr_ptr + 1] != Ta)):
+            row = arr_ptr
+            if kv_l[row] > cap:
+                raise ValueError(
+                    f"request {rid_l[row]} needs {kv_l[row]} KV tokens; "
+                    f"instance capacity is {cap:.0f} — it can never be "
+                    f"admitted")
+            if round_robin:
+                i = active[rr % len(active)]
+                rr += 1
+                p = posl[i]
+            elif len(active) == 1:
+                i = active[0]
+                p = 0
+            else:
+                p = load_act.argmin()
+                i = active[p]
+            wait_q[i].append(row)
+            load[i] += 1
+            load_act[p] += 1
+            arr_ptr += 1
+            if busy[i]:
+                continue
+            rows, prefill = admit(i, Ta)
+            bsz = nrun[i]
+            if bsz == 0:
+                continue
+            resident = sum_p[i] + bsz * kstep[i] - sum_as[i]
+            if grid_like:
+                if bsz > g_maxb:
+                    raise ValueError(
+                        f"batch outside priced range [1, {g_maxb}]: {bsz!r}")
+                j = bisect_left(g_edges, resident)
+                dt = g_row[bsz][j if j < g_lastj else g_lastj] + prefill
+            else:
+                dt = step_scalar(bsz, resident) + prefill
+            if not (dt > 0 and math.isfinite(dt)):
+                raise ValueError(f"non-positive/non-finite step time {dt!r}")
+            t_end = Ta + dt
+            logs[i].append((Ta, t_end, bsz, kvres[i],
+                            len(wait_q[i]) - wait_h[i], len(rows)))
+            if rows:
+                # the iteration that prefills a request emits its first token
+                if len(rows) <= _VEC_CUTOVER:
+                    for r in rows:
+                        t_first[r] = t_end
+                else:
+                    t_first[rows] = t_end
+            busy[i] = True
+            kstep[i] += 1
+            heapq.heappush(heap, (t_end, seq, i))
+            seq += 1
+            continue
+        # General wave at T: drain every same-timestamp event before
+        # starting iterations (simultaneous arrivals share a batch — see
+        # repro.serve.sim), arrivals first, then steps/ticks by seq.
+        kick: dict[int, None] = {}
+        while arr_ptr < n and t_arr_l[arr_ptr] == T:
+            row = arr_ptr
+            if kv_l[row] > cap:
+                raise ValueError(
+                    f"request {rid_l[row]} needs {kv_l[row]} KV tokens; "
+                    f"instance capacity is {cap:.0f} — it can never be "
+                    f"admitted")
+            if round_robin:
+                i = active[rr % len(active)]
+                rr += 1
+                p = posl[i]
+            elif len(active) == 1:
+                i = active[0]
+                p = 0
+            else:
+                p = load_act.argmin()
+                i = active[p]
+            wait_q[i].append(row)
+            load[i] += 1
+            load_act[p] += 1
+            kick[i] = None
+            arr_ptr += 1
+        while True:
+            has_step = bool(heap) and heap[0][0] == T
+            has_tick = tick_pending and next_tick == T
+            if has_step and (not has_tick or heap[0][1] < tick_seq):
+                _, _, i = heapq.heappop(heap)
+                busy[i] = False
+                bkt = buckets[i].pop(kstep[i] - 1, None)
+                if bkt is not None:
+                    rows, cnt, sp, sa, skv = bkt
+                    if cnt <= _VEC_CUTOVER:
+                        for r in rows:
+                            t_done[r] = T
+                            tokens_emitted[r] = out_l[r]
+                    else:
+                        t_done[rows] = T
+                        tokens_emitted[rows] = outputs[rows]
+                    nrun[i] -= cnt
+                    sum_p[i] -= sp
+                    sum_as[i] -= sa
+                    kvres[i] -= skv
+                    load[i] -= cnt
+                    p = posl[i]
+                    if p >= 0:
+                        load_act[p] -= cnt
+                    done += cnt
+                if i in draining_set and load[i] == 0:
+                    draining.remove(i)
+                    draining_set.discard(i)
+                    retire_records.append((T, i))
+                else:
+                    kick[i] = None
+            elif has_tick:
+                tick_pending = False
+                queued = running = 0
+                for i in active:
+                    queued += len(wait_q[i]) - wait_h[i]
+                    running += nrun[i]
+                target = autoscaler.decide(len(active), queued, running, mb)
+                if target > len(active):
+                    while len(active) < target:
+                        spawn()
+                    rebuild_active()
+                while len(active) > max(target, 1):
+                    drain_one(T)
+                scale_events.append(ScaleEvent(T, len(active), queued,
+                                               running))
+                if done < n:
+                    next_tick, tick_seq = T + interval, seq
+                    seq += 1
+                    tick_pending = True
+            else:
+                break
+        # Admit + size every kicked instance first, then price the whole
+        # wave's next steps through one batched CostGrid lookup.
+        starters = []
+        for i in kick:
+            if busy[i]:
+                continue
+            rows, prefill = admit(i, T)
+            bsz = nrun[i]
+            if bsz == 0:
+                continue
+            resident = sum_p[i] + bsz * kstep[i] - sum_as[i]
+            starters.append((i, bsz, resident, prefill, rows))
+        if len(starters) > 1 and grid_like:
+            times = cost.step_time(
+                np.array([s[1] for s in starters]),
+                np.array([s[2] for s in starters])).tolist()
+        else:
+            times = [step_scalar(s[1], s[2]) for s in starters]
+        for (i, bsz, _, prefill, rows), st in zip(starters, times):
+            dt = st + prefill
+            if not (dt > 0 and math.isfinite(dt)):
+                raise ValueError(f"non-positive/non-finite step time {dt!r}")
+            t_end = T + dt
+            logs[i].append((T, t_end, bsz, kvres[i],
+                            len(wait_q[i]) - wait_h[i], len(rows)))
+            if rows:
+                # the iteration that prefills a request emits its first token
+                if len(rows) <= _VEC_CUTOVER:
+                    for r in rows:
+                        t_first[r] = t_end
+                else:
+                    t_first[rows] = t_end
+            busy[i] = True
+            kstep[i] += 1
+            heapq.heappush(heap, (t_end, seq, i))
+            seq += 1
+
+    leftovers = sum(load)
+    assert done == n and leftovers == 0, "requests left in system"
+    # Retirements sort by time (stable within a wave), matching the order
+    # the oracle appended them while events were globally time-ordered.
+    retire_records.sort(key=lambda rec: rec[0])
+    retired = [i for _, i in retire_records]
+    order = active + draining + retired
+    return FleetResult(
+        batch=b,
+        metrics=SimMetrics.from_batch(b),
+        step_logs=[StepLog.from_rows(logs[i]) for i in order],
+        n_instances_final=len(active),
+        scale_events=scale_events,
+    )

@@ -141,7 +141,8 @@ class ArrivalSpec:
         phase = np.mod(t, self.period_s) / self.period_s
         return np.where(phase < frac, r_on, r_off) / peak
 
-    def generate(self, seed: int = 0) -> list[Request]:
+    def _sample_arrays(self, seed: int) -> tuple[np.ndarray, np.ndarray,
+                                                 np.ndarray]:
         rng = np.random.default_rng(seed)
         n = self.n_requests
         bursty = self.burst_fraction > 0 and self.burst_factor != 1.0 \
@@ -166,10 +167,22 @@ class ArrivalSpec:
             times = np.concatenate(times_l)
         prompts = self.prompt.sample(rng, n)
         outputs = self.output.sample(rng, n)
+        return times, prompts, outputs
+
+    def generate(self, seed: int = 0) -> list[Request]:
+        times, prompts, outputs = self._sample_arrays(seed)
         return [Request(rid=i, t_arrival=float(times[i]),
                         prompt_tokens=int(prompts[i]),
                         output_tokens=int(outputs[i]))
-                for i in range(n)]
+                for i in range(self.n_requests)]
+
+    def generate_batch(self, seed: int = 0) -> "RequestBatch":
+        """Materialize the same request stream as :meth:`generate` (identical
+        RNG draws) straight into struct-of-arrays form — no per-request
+        Python objects, which is what lets planet-scale fleet runs price
+        100k-request traces cheaply."""
+        times, prompts, outputs = self._sample_arrays(seed)
+        return RequestBatch.from_arrays(times, prompts, outputs)
 
 
 def replay(times: Sequence[float], prompts: Sequence[int] | int = 0,
@@ -182,6 +195,105 @@ def replay(times: Sequence[float], prompts: Sequence[int] | int = 0,
     return [Request(rid=int(i), t_arrival=float(times[i]),
                     prompt_tokens=int(p[i]), output_tokens=int(o[i]))
             for i in order]
+
+
+# -- struct-of-arrays requests -------------------------------------------------
+
+@dataclass
+class RequestBatch:
+    """A request stream as struct-of-arrays — rows are requests, sorted by
+    ``(t_arrival, rid)`` exactly like :func:`fresh_requests` orders object
+    lists. The batched fleet core (``repro.serve.fleetbatch``) reads the
+    static columns and fills the timing columns in place; :meth:`fresh`
+    hands out a pristine copy so one generated stream can drive every probe
+    of a fleet-size scan arrival-identically."""
+
+    rid: np.ndarray             # int64
+    t_arrival: np.ndarray       # float64, ascending (rid tie-break)
+    prompt_tokens: np.ndarray   # int64
+    output_tokens: np.ndarray   # int64
+    # -- filled in by the simulator -------------------------------------------
+    t_admitted: np.ndarray = None
+    t_first_token: np.ndarray = None
+    t_done: np.ndarray = None
+    tokens_emitted: np.ndarray = None
+
+    def __post_init__(self):
+        n = len(self.rid)
+        if self.t_admitted is None:
+            self.t_admitted = np.full(n, NAN)
+        if self.t_first_token is None:
+            self.t_first_token = np.full(n, NAN)
+        if self.t_done is None:
+            self.t_done = np.full(n, NAN)
+        if self.tokens_emitted is None:
+            self.tokens_emitted = np.zeros(n, dtype=np.int64)
+        if np.any(self.output_tokens < 1):
+            raise ValueError("output_tokens must be >= 1")
+        if np.any(self.prompt_tokens < 0) or np.any(self.t_arrival < 0):
+            raise ValueError("prompt_tokens/t_arrival must be >= 0")
+
+    def __len__(self) -> int:
+        return len(self.rid)
+
+    @property
+    def kv_tokens(self) -> np.ndarray:
+        """Peak KV residency each request reserves at admission."""
+        return self.prompt_tokens + self.output_tokens
+
+    @classmethod
+    def from_arrays(cls, times, prompts, outputs,
+                    rids=None) -> "RequestBatch":
+        t = np.asarray(times, dtype=np.float64)
+        rid = np.arange(len(t), dtype=np.int64) if rids is None \
+            else np.asarray(rids, dtype=np.int64)
+        order = np.lexsort((rid, t))
+        return cls(rid=rid[order], t_arrival=t[order],
+                   prompt_tokens=np.asarray(prompts, np.int64)[order],
+                   output_tokens=np.asarray(outputs, np.int64)[order])
+
+    @classmethod
+    def from_requests(cls, requests: Iterable[Request]) -> "RequestBatch":
+        reqs = list(requests)
+        return cls.from_arrays([r.t_arrival for r in reqs],
+                               [r.prompt_tokens for r in reqs],
+                               [r.output_tokens for r in reqs],
+                               rids=[r.rid for r in reqs])
+
+    @classmethod
+    def from_completed(cls, reqs: Sequence[Request]) -> "RequestBatch":
+        """SoA snapshot of an already-simulated request list. ``reqs`` must
+        be arrival-sorted (:func:`fresh_requests` order), so columns line up
+        positionally."""
+        rb = cls.from_requests(reqs)
+        rb.t_admitted = np.array([r.t_admitted for r in reqs])
+        rb.t_first_token = np.array([r.t_first_token for r in reqs])
+        rb.t_done = np.array([r.t_done for r in reqs])
+        rb.tokens_emitted = np.array([r.tokens_emitted for r in reqs],
+                                     dtype=np.int64)
+        return rb
+
+    def fresh(self) -> "RequestBatch":
+        """Pristine copy (timing columns reset) — the SoA analogue of
+        :func:`fresh_requests`."""
+        return RequestBatch(rid=self.rid, t_arrival=self.t_arrival,
+                            prompt_tokens=self.prompt_tokens,
+                            output_tokens=self.output_tokens)
+
+    def to_requests(self) -> list[Request]:
+        """Materialize per-request objects (compat with the oracle API)."""
+        out = []
+        for i in range(len(self.rid)):
+            r = Request(rid=int(self.rid[i]),
+                        t_arrival=float(self.t_arrival[i]),
+                        prompt_tokens=int(self.prompt_tokens[i]),
+                        output_tokens=int(self.output_tokens[i]))
+            r.t_admitted = float(self.t_admitted[i])
+            r.t_first_token = float(self.t_first_token[i])
+            r.t_done = float(self.t_done[i])
+            r.tokens_emitted = int(self.tokens_emitted[i])
+            out.append(r)
+        return out
 
 
 # -- instance mechanics --------------------------------------------------------
@@ -199,7 +311,12 @@ class StepLog:
 
     @classmethod
     def from_rows(cls, rows: list[tuple]) -> "StepLog":
-        cols = np.array(rows, dtype=float).reshape(-1, 6).T
+        if not rows:
+            cols = np.empty((6, 0), dtype=float)
+        else:
+            # zip(*rows) transposes at C speed — much faster than
+            # np.array() introspecting a list of tuples row by row
+            cols = [np.asarray(c, dtype=float) for c in zip(*rows)]
         return cls(t_start=cols[0], t_end=cols[1],
                    batch=cols[2].astype(int), kv_reserved=cols[3],
                    queued=cols[4].astype(int), admitted=cols[5].astype(int))
@@ -319,8 +436,14 @@ class Slo:
         if len(m.ttft) == 0:
             return True
         p = self.percentile
+        # TPOT percentile over multi-token requests ONLY — single-token
+        # requests have no inter-token gap (tpot recorded as 0.0) and would
+        # dilute the percentile, under-sizing fleets on short-output
+        # workloads (the ok_mask divergence fixed per ROADMAP direction 3).
+        tpot = m.tpot[m.output_tokens > 1]
+        tpot_ok = len(tpot) == 0 or np.percentile(tpot, p) <= self.tpot_s
         return (np.percentile(m.ttft, p) <= self.ttft_s
-                and np.percentile(m.tpot, p) <= self.tpot_s
+                and tpot_ok
                 and np.percentile(m.e2e, p) <= self.e2e_s)
 
     def ok_mask(self, m: "SimMetrics") -> np.ndarray:
@@ -342,13 +465,16 @@ class SimMetrics:
     t_last_done: float
 
     @classmethod
-    def from_requests(cls, requests: Sequence[Request]) -> "SimMetrics":
-        if not requests:
+    def from_arrays(cls, t_arr, t_first, t_done, out) -> "SimMetrics":
+        """Metrics straight from timing columns (a :class:`RequestBatch`) —
+        no per-request objects in the loop."""
+        if len(t_arr) == 0:
             z = np.zeros(0)
             return cls(z, z, z, z.astype(int), 0.0, 0.0)
-        arr = np.array([(r.t_arrival, r.t_first_token, r.t_done,
-                         r.output_tokens) for r in requests])
-        t_arr, t_first, t_done, out = arr.T
+        t_arr, t_first, t_done, out = (np.asarray(t_arr, dtype=np.float64),
+                                       np.asarray(t_first, dtype=np.float64),
+                                       np.asarray(t_done, dtype=np.float64),
+                                       np.asarray(out, dtype=np.float64))
         if np.isnan(t_done).any():
             raise ValueError("metrics over an incomplete simulation")
         gaps = np.maximum(out - 1, 1)
@@ -360,6 +486,21 @@ class SimMetrics:
             t_first_arrival=float(t_arr.min()),
             t_last_done=float(t_done.max()),
         )
+
+    @classmethod
+    def from_requests(cls, requests: Sequence[Request]) -> "SimMetrics":
+        if not requests:
+            z = np.zeros(0)
+            return cls(z, z, z, z.astype(int), 0.0, 0.0)
+        arr = np.array([(r.t_arrival, r.t_first_token, r.t_done,
+                         r.output_tokens) for r in requests])
+        t_arr, t_first, t_done, out = arr.T
+        return cls.from_arrays(t_arr, t_first, t_done, out)
+
+    @classmethod
+    def from_batch(cls, batch: "RequestBatch") -> "SimMetrics":
+        return cls.from_arrays(batch.t_arrival, batch.t_first_token,
+                               batch.t_done, batch.output_tokens)
 
     @property
     def makespan_s(self) -> float:

@@ -1,0 +1,83 @@
+"""Hypothesis property tests for the vectorized fleet core: over randomized
+cost grids, arrival processes, routers, fleet sizes, and KV capacities, the
+batched engine (`repro.serve.fleetbatch`) must reproduce the per-instance
+heap oracle bit for bit — request timings, step logs, and scale events.
+
+Fixed-seed deterministic variants of the same invariant run without
+hypothesis in tests/test_fleet_batch.py.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sweep import CostGrid
+from repro.ft.elastic import QueueDepthAutoscaler
+from repro.serve.fleet import FleetSim
+from repro.serve.sim import ArrivalSpec, LengthDist
+from test_fleet_batch import assert_same_result
+
+
+@st.composite
+def fleet_case(draw):
+    n_batches = draw(st.integers(min_value=1, max_value=3))
+    batches = tuple(2 ** k for k in range(n_batches))
+    base = draw(st.floats(min_value=1e-4, max_value=5e-3))
+    tab = np.asarray([[base * (1 + 0.1 * bi + 0.05 * j) for j in range(3)]
+                      for bi in range(n_batches)])
+    grid = CostGrid("prop", batches, (16.0, 128.0, float("inf")), tab,
+                    prefill_s_per_token=draw(st.sampled_from([0.0, 1e-4])))
+
+    kind = draw(st.sampled_from(["poisson", "bursty"]))
+    spec_kw = {}
+    if kind == "bursty":
+        spec_kw = dict(burst_factor=draw(st.floats(min_value=1.5,
+                                                   max_value=6.0)),
+                       burst_fraction=0.3, period_s=0.2)
+    spec = ArrivalSpec(
+        kind, rate=draw(st.floats(min_value=50.0, max_value=1500.0)),
+        n_requests=draw(st.integers(min_value=1, max_value=200)),
+        prompt=LengthDist("uniform", low=1, high=40),
+        output=LengthDist("uniform", low=1,
+                          high=draw(st.integers(min_value=1, max_value=12))),
+        **spec_kw)
+
+    kw = dict(
+        n_instances=draw(st.integers(min_value=1, max_value=5)),
+        router=draw(st.sampled_from(["least_loaded", "round_robin"])),
+        max_batch=batches[-1],
+        kv_capacity_tokens=draw(st.sampled_from([64.0, 400.0,
+                                                 float("inf")])),
+    )
+    return grid, kw, spec, draw(st.integers(min_value=0, max_value=2**31 - 1))
+
+
+@settings(max_examples=30, deadline=None)
+@given(case=fleet_case())
+def test_batched_matches_oracle(case):
+    grid, kw, spec, seed = case
+    rb = FleetSim(grid, **kw).run(spec, seed=seed)
+    ro = FleetSim(grid, **kw).run(spec, seed=seed, batched=False)
+    assert_same_result(rb, ro)
+
+
+@settings(max_examples=15, deadline=None)
+@given(rate=st.floats(min_value=100.0, max_value=2000.0),
+       n0=st.integers(min_value=1, max_value=6),
+       interval=st.sampled_from([0.02, 0.05, 0.2]),
+       seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_batched_matches_oracle_autoscaled(rate, n0, interval, seed):
+    spec = ArrivalSpec("as", rate, 300, prompt=LengthDist("fixed", 8),
+                       output=LengthDist("uniform", low=1, high=6))
+    tab = np.full((2, 3), 1e-3)
+    grid = CostGrid("as", (1, 4), (16.0, 128.0, float("inf")), tab)
+
+    def sim():
+        return FleetSim(grid, n0, max_batch=4, kv_capacity_tokens=4096.0,
+                        autoscaler=QueueDepthAutoscaler(min_instances=1,
+                                                        max_instances=8),
+                        autoscale_interval_s=interval)
+
+    assert_same_result(sim().run(spec, seed=seed),
+                       sim().run(spec, seed=seed, batched=False))
