@@ -255,4 +255,29 @@ def bench_core_suite(csv: Csv):
             f"registry scenarios x Table V in one pass")
 
 
-ALL = [bench_core, bench_timemodel, bench_core_suite]
+def bench_check(csv: Csv):
+    """Static analyzer: cold jaxpr trace + R1-R5 lint over the kernel
+    catalog, and the kernel.* registry sweep those facts feed."""
+    from repro.check import catalog
+    from repro.check.rules import run_rules
+
+    def cold_lint():
+        catalog.trace_case.cache_clear()
+        return run_rules(catalog.trace_all())
+
+    findings, us_lint = timed(cold_lint)
+    n_calls = sum(len(catalog.trace_case(n)) for n in catalog.case_names())
+    csv.add("core.check.lint", us_lint,
+            f"cold abstract-trace + lint: {n_calls} pallas_calls / "
+            f"{len(catalog.case_names())} cases, "
+            f"{sum(1 for f in findings if not f.waived)} unwaived")
+
+    def kernel_sweep():
+        return SweepEngine(["kernel.*"], configs=copa.TABLE_V).run()
+
+    grid, us_k = timed_min(kernel_sweep)
+    csv.add("core.check.sweep", us_k,
+            f"{len(grid.rows)} rows: kernel.* catalog x Table V")
+
+
+ALL = [bench_core, bench_timemodel, bench_core_suite, bench_check]

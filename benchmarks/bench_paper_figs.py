@@ -21,7 +21,7 @@ from benchmarks.common import (
     timed,
 )
 from repro.core import copa, hw
-from repro.core.hw import GB, MB
+from repro.core.hw import MB
 from repro.core.sweep import SweepEngine
 from repro.workloads import mlperf
 from repro.workloads.registry import scaleout as registry_scaleout

@@ -13,11 +13,9 @@ from __future__ import annotations
 import json
 import os
 
-import numpy as np
 
 from benchmarks.common import Csv, timed
-from repro.core import hw, perfmodel
-from repro.core.hw import GB, MB
+from repro.core.hw import MB
 from repro.core.roofline import RooflineReport, useful_flops_cell
 import repro.configs as configs
 

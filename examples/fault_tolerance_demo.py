@@ -13,7 +13,6 @@ import tempfile
 sys.path.insert(0, "src")
 
 import jax
-import jax.numpy as jnp
 
 import repro.configs as configs
 from repro.checkpoint.ckpt import restore

@@ -1,0 +1,33 @@
+"""repro.check — static analysis for the Pallas kernels.
+
+``trace_kernel`` abstract-evaluates a kernel to :class:`KernelFacts`
+(grid, BlockSpecs, evaluated index maps, scratch, dots, store guards)
+without executing it; ``run_rules`` lints the facts (R1-R5);
+``compile_trace`` replays the block placements as an analytic touch
+stream for the sweep engine. CLI: ``python -m repro.check``.
+
+Heavy imports (jax) stay lazy: attributes resolve on first access.
+"""
+from __future__ import annotations
+
+_EXPORTS = {
+    "trace_kernel": ("repro.check.facts", "trace_kernel"),
+    "KernelFacts": ("repro.check.facts", "KernelFacts"),
+    "BlockFacts": ("repro.check.facts", "BlockFacts"),
+    "Finding": ("repro.check.rules", "Finding"),
+    "run_rules": ("repro.check.rules", "run_rules"),
+    "RULES": ("repro.check.rules", "RULES"),
+    "compile_trace": ("repro.check.streams", "compile_trace"),
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    try:
+        module, attr = _EXPORTS[name]
+    except KeyError:
+        raise AttributeError(f"module 'repro.check' has no attribute "
+                             f"{name!r}") from None
+    import importlib
+    return getattr(importlib.import_module(module), attr)

@@ -1,0 +1,296 @@
+"""Rule engine over KernelFacts: R1-R5 findings + inline waivers.
+
+Rules (constants from ``repro.core.hw``):
+
+  R1  tile alignment      — VMEM block lane/sublane dims are multiples of
+                            the dtype's minimum tile, unless the block
+                            covers the full array dim.
+  R2  index_map bounds    — index maps evaluated over the whole grid stay
+                            inside [0, cdiv(dim, block)); output placements
+                            must cover every block.
+  R3  write hazard        — an output block revisited across a
+                            non-innermost grid axis, or revisited with an
+                            unguarded store, races with the pipeline (the
+                            guarded acc_scr init/finalize idiom is the fix).
+  R4  accumulator dtype   — matmuls on sub-f32 operands must accumulate in
+                            f32 (``preferred_element_type``).
+  R5  footprint           — double-buffered blocks + scratch must fit the
+                            per-core VMEM budget; SMEM operands the SMEM
+                            budget.
+
+Waivers: a ``# check: waive[R3]`` (or ``waive[R1,R5]``) comment inside a
+function waives findings of those rules anchored inside that function's
+body; at module top level it waives the whole file.
+"""
+from __future__ import annotations
+
+import ast
+import math
+import re
+from dataclasses import dataclass, replace
+from functools import lru_cache
+
+import numpy as np
+
+from repro.core import hw
+from repro.check.facts import KernelFacts
+
+RULES = ("R1", "R2", "R3", "R4", "R5")
+
+RULE_DESCRIPTIONS = {
+    "R1": "block tile alignment vs MXU/VPU minimum tiles",
+    "R2": "index_map bounds and output coverage over the grid",
+    "R3": "write hazard on revisited output blocks",
+    "R4": "f32 accumulation for low-precision matmuls",
+    "R5": "VMEM/SMEM footprint per grid step vs per-core budget",
+}
+
+_F32 = "float32"
+_LOW_PRECISION = re.compile(r"^(bfloat16|float16|float8_e\w+)$")
+
+
+@dataclass(frozen=True)
+class Finding:
+    rule: str
+    kernel: str
+    case: str
+    file: str
+    line: int
+    message: str
+    waived: bool = False
+
+    def format(self) -> str:
+        tag = " (waived)" if self.waived else ""
+        return (f"{self.file}:{self.line}: {self.rule} "
+                f"[{self.kernel} @ {self.case}]{tag} {self.message}")
+
+
+def _finding(facts: KernelFacts, rule: str, message: str) -> Finding:
+    return Finding(rule=rule, kernel=facts.kernel, case=facts.case,
+                   file=facts.src_file, line=facts.src_line, message=message)
+
+
+# --- R1: tile alignment ------------------------------------------------------
+
+def _check_tiles(facts: KernelFacts) -> list[Finding]:
+    out = []
+    for blk in facts.blocks:
+        if blk.memory_space != "vmem" or not blk.block_shape:
+            continue
+        problems = []
+        lane = blk.block_shape[-1]
+        if lane % hw.TPU_LANE and lane != blk.array_shape[-1]:
+            problems.append(f"lane dim {lane} is not a multiple of "
+                            f"{hw.TPU_LANE}")
+        if len(blk.block_shape) >= 2:
+            sub = blk.block_shape[-2]
+            want = hw.min_tile(blk.itemsize)[0]
+            if sub % want and sub != blk.array_shape[-2]:
+                problems.append(f"sublane dim {sub} is not a multiple of "
+                                f"{want} for {blk.dtype}")
+        if problems:
+            out.append(_finding(
+                facts, "R1",
+                f"{blk.role}[{blk.index}] block {blk.block_shape} "
+                f"({blk.dtype}): " + "; ".join(problems)))
+    return out
+
+
+# --- R2: index_map bounds + coverage -----------------------------------------
+
+def _check_bounds(facts: KernelFacts) -> list[Finding]:
+    out = []
+    for blk in facts.blocks:
+        if not blk.block_shape:
+            continue
+        idx = blk.block_indices
+        nb = blk.nblocks
+        oob = (idx < 0) | (idx >= np.asarray(nb, dtype=np.int64))
+        oob_steps = oob.any(axis=1).nonzero()[0]
+        if len(oob_steps):
+            step = int(oob_steps[0])
+            out.append(_finding(
+                facts, "R2",
+                f"{blk.role}[{blk.index}] index_map out of bounds at grid "
+                f"step {step}: block index "
+                f"{tuple(int(v) for v in idx[step])} outside "
+                f"{tuple(nb)} (= cdiv(array {blk.array_shape}, "
+                f"block {blk.block_shape}))"))
+            continue   # coverage is meaningless once placements are OOB
+        if blk.role == "out":
+            visited = len(set(map(int, blk.flat_block_ids())))
+            total = math.prod(nb)
+            if visited < total:
+                out.append(_finding(
+                    facts, "R2",
+                    f"out[{blk.index}] placements cover {visited}/{total} "
+                    f"blocks — {total - visited} output block(s) never "
+                    f"written"))
+    return out
+
+
+# --- R3: write hazard --------------------------------------------------------
+
+def _check_write_hazard(facts: KernelFacts) -> list[Finding]:
+    out = []
+    for blk in facts.outputs:
+        idx = blk.block_indices
+        if bool(((idx < 0) |
+                 (idx >= np.asarray(blk.nblocks, dtype=np.int64))).any()):
+            continue   # OOB placements (R2's finding) make the visit
+            # table meaningless — don't pile a phantom hazard on top
+        runs = blk.runs()
+        seen: dict[int, int] = {}
+        split = False
+        for bid, _, _ in runs:
+            seen[bid] = seen.get(bid, 0) + 1
+            if seen[bid] > 1:
+                split = True
+        if split:
+            out.append(_finding(
+                facts, "R3",
+                f"out[{blk.index}] block revisited across a non-innermost "
+                f"grid axis (same block in {max(seen.values())} separate "
+                f"runs): the pipeline may flush a stale copy between "
+                f"visits — reorder the grid so revisits are contiguous"))
+            continue
+        revisited = any(stop - start > 1 for _, start, stop in runs)
+        if revisited and blk.unguarded_stores:
+            out.append(_finding(
+                facts, "R3",
+                f"out[{blk.index}] block is revisited across "
+                f"{max(stop - start for _, start, stop in runs)} grid steps "
+                f"but has {blk.unguarded_stores} store(s) outside pl.when — "
+                f"every store to a revisited block must be guarded "
+                f"(init/accumulate in scratch, write once on the last "
+                f"visit, as in flash_attention's acc_scr)"))
+    return out
+
+
+# --- R4: accumulator dtype ---------------------------------------------------
+
+def _check_accumulators(facts: KernelFacts) -> list[Finding]:
+    out = []
+    for i, dot in enumerate(facts.dots):
+        low = (_LOW_PRECISION.match(dot.lhs_dtype)
+               or _LOW_PRECISION.match(dot.rhs_dtype))
+        if not low:
+            continue
+        problems = []
+        if dot.out_dtype != _F32:
+            problems.append(f"accumulates in {dot.out_dtype}")
+        if dot.preferred_element_type != _F32:
+            problems.append(
+                "preferred_element_type is "
+                f"{dot.preferred_element_type or 'unset'}")
+        if problems:
+            out.append(_finding(
+                facts, "R4",
+                f"dot_general #{i} ({dot.lhs_dtype} x {dot.rhs_dtype}): "
+                + "; ".join(problems)
+                + " — pass preferred_element_type=jnp.float32"))
+    return out
+
+
+# --- R5: footprint -----------------------------------------------------------
+
+def _check_footprint(facts: KernelFacts) -> list[Finding]:
+    out = []
+    vmem = sum(b.block_bytes for b in facts.blocks
+               if b.memory_space == "vmem") * hw.PALLAS_PIPELINE_BUFFERS
+    vmem += sum(s.nbytes for s in facts.scratch if s.memory_space == "vmem")
+    if vmem > hw.PALLAS_VMEM_BUDGET:
+        out.append(_finding(
+            facts, "R5",
+            f"VMEM footprint per grid step is {vmem / hw.MB:.1f} MB "
+            f"({hw.PALLAS_PIPELINE_BUFFERS}x double-buffered blocks + "
+            f"scratch) > budget {hw.PALLAS_VMEM_BUDGET / hw.MB:.0f} MB"))
+    smem = sum(b.block_bytes for b in facts.blocks
+               if b.memory_space == "smem")
+    smem += sum(s.nbytes for s in facts.scratch if s.memory_space == "smem")
+    if smem > hw.PALLAS_SMEM_BUDGET:
+        out.append(_finding(
+            facts, "R5",
+            f"SMEM footprint is {smem / hw.KB:.1f} KB > budget "
+            f"{hw.PALLAS_SMEM_BUDGET / hw.KB:.0f} KB"))
+    return out
+
+
+_RULE_FNS = {
+    "R1": _check_tiles,
+    "R2": _check_bounds,
+    "R3": _check_write_hazard,
+    "R4": _check_accumulators,
+    "R5": _check_footprint,
+}
+
+
+# --- waivers -----------------------------------------------------------------
+
+_WAIVE_RE = re.compile(r"#\s*check:\s*waive\[([A-Z0-9,\s]+)\]")
+
+
+@dataclass(frozen=True)
+class _Waiver:
+    rules: tuple[str, ...]
+    start: int       # first waived line (inclusive)
+    stop: int        # last waived line (inclusive)
+
+
+@lru_cache(maxsize=256)
+def _waivers_for(path: str) -> tuple[_Waiver, ...]:
+    try:
+        with open(path) as f:
+            source = f.read()
+    except OSError:
+        return ()
+    spans = []     # function spans, innermost-last
+    try:
+        tree = ast.parse(source)
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                spans.append((node.lineno, node.end_lineno))
+    except SyntaxError:
+        pass
+    waivers = []
+    for lineno, line in enumerate(source.splitlines(), start=1):
+        m = _WAIVE_RE.search(line)
+        if not m:
+            continue
+        rules = tuple(r.strip() for r in m.group(1).split(",") if r.strip())
+        enclosing = [s for s in spans if s[0] <= lineno <= s[1]]
+        if enclosing:   # innermost function containing the comment
+            start, stop = max(enclosing, key=lambda s: s[0])
+        else:           # module level: waive the whole file
+            start, stop = 1, len(source.splitlines()) + 1
+        waivers.append(_Waiver(rules=rules, start=start, stop=stop))
+    return tuple(waivers)
+
+
+def apply_waivers(findings: list[Finding]) -> list[Finding]:
+    """Mark findings covered by ``# check: waive[...]`` comments."""
+    out = []
+    for f in findings:
+        waived = any(
+            f.rule in w.rules and w.start <= f.line <= w.stop
+            for w in _waivers_for(f.file))
+        out.append(replace(f, waived=True) if waived and not f.waived else f)
+    return out
+
+
+# --- entry points ------------------------------------------------------------
+
+def run_rules(facts, rules=None, waivers: bool = True) -> list[Finding]:
+    """Run the selected rules over one KernelFacts or a list of them."""
+    if isinstance(facts, KernelFacts):
+        facts = [facts]
+    selected = list(rules) if rules else list(RULES)
+    unknown = [r for r in selected if r not in _RULE_FNS]
+    if unknown:
+        raise ValueError(f"unknown rules {unknown}; known: {list(RULES)}")
+    findings = []
+    for fct in facts:
+        for rule in selected:
+            findings.extend(_RULE_FNS[rule](fct))
+    findings.sort(key=lambda f: (f.file, f.line, f.rule, f.message))
+    return apply_waivers(findings) if waivers else findings

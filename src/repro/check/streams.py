@@ -1,0 +1,91 @@
+"""Compile KernelFacts into analytic touch streams (core.trace.Trace).
+
+This is the kernel->registry bridge (ROADMAP direction 5): the same
+statically-extracted block placements that the rules lint are replayed as
+one touch per block *fetch* in grid-iteration order, so the sweep engine
+prices measured-structure kernel traffic instead of hand-written per-tensor
+streams.
+
+Semantics (matching the Pallas pipeline):
+- one Op per grid step;
+- an input block is read when its index_map output changes from the
+  previous step (the pipeline keeps the block resident otherwise);
+- an output block is written once per consecutive same-block run, at the
+  run's last step (the guarded-finalize idiom);
+- per-step flops are the unconditional dot_generals, with pl.when-guarded
+  dots charged on write steps;
+- tensor names are per block (``<kernel>.<ref>[<flat_block_id>]``) so the
+  cache model sees block-level reuse exactly.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.trace import Trace, gemm_parallelism
+from repro.check.facts import KernelFacts
+
+_PRECISION = {
+    "float32": "fp32", "float64": "fp32", "bfloat16": "bf16",
+    "float16": "fp16", "int8": "int8", "uint8": "int8",
+}
+
+
+def _precision_of(facts: KernelFacts) -> str:
+    for blk in facts.inputs:
+        if blk.memory_space == "vmem":
+            if blk.dtype.startswith("float8"):
+                return "fp8"
+            return _PRECISION.get(blk.dtype, "fp16")
+    return "fp16"
+
+
+def _parallelism_of(facts: KernelFacts) -> float:
+    best = 0.0
+    for dot in facts.dots:
+        shape = dot.out_shape
+        m = shape[-2] if len(shape) >= 2 else 1
+        n = shape[-1] if shape else 1
+        best = max(best, gemm_parallelism(int(m), int(n)))
+    return best if best > 0 else float("inf")
+
+
+def append_kernel_ops(trace: Trace, facts: KernelFacts) -> None:
+    """Append one Op per grid step of ``facts`` to ``trace``."""
+    n = facts.n_steps
+    fetch = [blk.fetch_mask() for blk in facts.inputs]
+    in_ids = [blk.flat_block_ids() for blk in facts.inputs]
+    out_ids = [blk.flat_block_ids() for blk in facts.outputs]
+    # A run's last step writes the block out.
+    write_step = []
+    for blk in facts.outputs:
+        mask = np.zeros(n, dtype=bool)
+        for _, _, stop in blk.runs():
+            mask[stop - 1] = True
+        write_step.append(mask)
+
+    step_flops = facts.flops_per_step()
+    fin_flops = facts.guarded_flops()
+    precision = _precision_of(facts)
+    parallelism = _parallelism_of(facts)
+    kname = facts.kernel.lstrip("_")
+
+    for step in range(n):
+        reads = [
+            (f"{kname}.{blk.name}[{int(in_ids[i][step])}]", blk.block_bytes)
+            for i, blk in enumerate(facts.inputs) if fetch[i][step]]
+        writes = [
+            (f"{kname}.{blk.name}[{int(out_ids[i][step])}]", blk.block_bytes)
+            for i, blk in enumerate(facts.outputs) if write_step[i][step]]
+        flops = step_flops + (fin_flops if writes else 0.0)
+        trace.emit(f"{kname}.s{step}", flops, reads=reads, writes=writes,
+                   precision=precision, parallelism=parallelism)
+
+
+def compile_trace(facts_list, name: str, kind: str = "inference") -> Trace:
+    """One Trace for a kernel invocation (possibly several pallas_calls)."""
+    if isinstance(facts_list, KernelFacts):
+        facts_list = [facts_list]
+    trace = Trace(name=name, kind=kind)
+    for facts in facts_list:
+        append_kernel_ops(trace, facts)
+    return trace

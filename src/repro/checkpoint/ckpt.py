@@ -17,7 +17,6 @@ Guarantees:
 """
 from __future__ import annotations
 
-import io
 import os
 import shutil
 import threading

@@ -10,7 +10,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 
 from repro.core import hw
-from repro.core.hw import GB, GBPS, MB, TBPS, GpuSpec, LinkSpec
+from repro.core.hw import MB, GpuSpec, LinkSpec
 
 # Paper §IV-D: UHB link set to 2x RD + 2x WR of *half* the baseline DRAM BW
 # each direction: total 10.8 TB/s for GPU-N's 2.7 TB/s DRAM.

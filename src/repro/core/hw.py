@@ -144,3 +144,29 @@ TPU_V5E = TpuSpec(
     hbm_capacity=16 * GB, ici_link_bandwidth=50 * GBPS, ici_links=4,
     vmem_capacity=128 * MB,
 )
+
+
+# --- TPU tiling + Pallas budgets (used by the repro.check static analyzer) ----
+
+# The MXU is a 128x128 systolic array; the VPU operates on (8, 128) f32
+# registers. VMEM tiles are (sublane, lane) with lane fixed at 128 and the
+# minimum sublane count scaling inversely with dtype width.
+MXU_TILE = (128, 128)
+VPU_TILE = (8, 128)
+TPU_LANE = 128
+# dtype itemsize (bytes) -> minimum sublane count of one VMEM tile.
+TPU_MIN_SUBLANE = {8: 8, 4: 8, 2: 16, 1: 32}
+
+
+def min_tile(dtype_itemsize: int) -> tuple[int, int]:
+    """Minimum (sublane, lane) VMEM tile for a dtype of the given width."""
+    return (TPU_MIN_SUBLANE.get(int(dtype_itemsize), 8), TPU_LANE)
+
+
+# Pallas double-buffers every grid-blocked operand so the next block's DMA
+# overlaps the current compute step; the R5 footprint rule charges each
+# in/out block twice and scratch once.
+PALLAS_PIPELINE_BUFFERS = 2
+PALLAS_VMEM_BUDGET = TPU_V5E.vmem_capacity
+# SMEM holds scalars/control state only; budget is deliberately tight.
+PALLAS_SMEM_BUDGET = 1 * MB

@@ -57,6 +57,7 @@ from __future__ import annotations
 
 from collections import OrderedDict
 from dataclasses import dataclass, field
+from functools import lru_cache
 from typing import Callable, Iterable, Sequence, Union
 
 import numpy as np
@@ -899,18 +900,36 @@ class CostGrid:
         return self.max_batch / (self.step_time_s[-1, 0] * output_tokens)
 
 
-def _kv_step_time(spec: GpuSpec, kv_bytes: float) -> float:
-    """Per-iteration KV sweep time: the whole resident cache is read once.
-    A cache that fits the LLC is served at on-package bandwidth (the COPA
-    L3/UHB link, or L2 for monolithic specs) — the 'shorter decode steps'
-    mechanism; otherwise it streams from DRAM."""
-    if kv_bytes <= 0:
-        return 0.0
-    if kv_bytes <= spec.llc_capacity:
-        bw = spec.l3_bandwidth if spec.l3_capacity else spec.l2_bandwidth
-    else:
-        bw = spec.dram_bandwidth
-    return kv_bytes / bw
+@lru_cache(maxsize=None)
+def _kv_sweep_trace(kv_bytes: int) -> Trace:
+    """One decode iteration's KV sweep as a trace: the whole resident cache
+    is read once per step. Priced cyclically, the cache model keeps the
+    LLC-resident fraction on package and streams only the remainder from
+    DRAM — the closed form this replaced charged the whole sweep to a
+    single level and over-priced partially-resident caches."""
+    tr = Trace(name=f"serve.kvsweep.{int(kv_bytes)}", kind="inference")
+    tr.emit("kv.sweep", 0.0, reads=[("kvcache", int(kv_bytes))],
+            precision="bf16")
+    return tr
+
+
+def kv_sweep_times(specs: Sequence[GpuSpec],
+                   kv_bytes_seq: Sequence[float]) -> np.ndarray:
+    """Per-step KV read times of shape ``(len(kv_bytes_seq), len(specs))``,
+    priced through the cache model (steady-state cyclic residency; ideal
+    occupancy and no launch overhead — the sweep rides along the decode
+    math it accompanies). All sizes share one suite-level ``time_batch``."""
+    sizes = [float(b) for b in kv_bytes_seq]
+    finite = sorted({int(s) for s in sizes if s > 0 and np.isfinite(s)})
+    out = np.zeros((len(sizes), len(specs)))
+    if finite:
+        suite = suite_analysis_for([_kv_sweep_trace(s) for s in finite])
+        times = suite.time_batch(list(specs), ideal_occupancy=True)
+        lookup = {s: times[:, i] for i, s in enumerate(finite)}
+    for r, s in enumerate(sizes):
+        if s > 0:
+            out[r] = lookup[int(s)] if np.isfinite(s) else np.inf
+    return out
 
 
 def prefill_cost_per_token(scenario: str, configs: Sequence[ConfigLike]) -> np.ndarray:
@@ -982,16 +1001,16 @@ def serve_cost_grids(
         prefill = np.full(len(specs), float(prefill_s_per_token))
     edges = tuple(float(e) for e in seq_edges) if kv_bytes_per_token > 0 \
         else (float("inf"),)
+    kv = kv_sweep_times(spec_objs,
+                        [e * kv_bytes_per_token for e in edges]) \
+        if kv_bytes_per_token > 0 else np.zeros((1, len(specs)))
     out = {}
     for ci, (name, spec) in enumerate(specs):
-        kv = np.array([_kv_step_time(spec, e * kv_bytes_per_token)
-                       for e in edges]) if kv_bytes_per_token > 0 \
-            else np.zeros(1)
         out[name] = CostGrid(
             config=name,
             batches=batches,
             seq_edges=edges,
-            step_time_s=base[:, ci][:, None] + kv[None, :],
+            step_time_s=base[:, ci][:, None] + kv[:, ci][None, :],
             prefill_s_per_token=float(prefill[ci]),
         )
     return out

@@ -20,7 +20,6 @@ is validated against the unpipelined reference in
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -23,7 +23,7 @@ import time
 from dataclasses import dataclass, field
 from typing import Callable
 
-from repro.checkpoint.ckpt import AsyncCheckpointer, latest_step, restore
+from repro.checkpoint.ckpt import AsyncCheckpointer, latest_step
 
 
 @dataclass

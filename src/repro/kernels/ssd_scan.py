@@ -20,6 +20,10 @@ from jax.experimental.pallas import tpu as pltpu
 
 def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, st_scr, *,
                 chunk: int, num_chunks: int):
+    # check: waive[R1] — dt streams as (1, chunk) row slabs: the sublane dim
+    # is deliberately 1 (one (b,h) row per grid step, chunk on the lane dim);
+    # Mosaic pads the single sublane to a full tile and the slab walks in
+    # lockstep with the x/b/c chunk blocks, so alignment costs nothing here.
     ci = pl.program_id(2)
 
     @pl.when(ci == 0)

@@ -11,24 +11,22 @@ same driver runs the full ones (mesh via ``--mesh data,model``).
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 import repro.configs as configs
 from repro.core import msm
 from repro.data.pipeline import DataConfig, DataLoader
 from repro.ft import ElasticRunner, RunState, StepWatchdog
-from repro.checkpoint.ckpt import restore, latest_step
+from repro.checkpoint.ckpt import restore
 from repro.launch.mesh import make_host_mesh, set_default_mesh
 from repro.models import LanguageModel
 from repro.models.base import abstract_params
 from repro.sharding.partition import batch_spec, param_shardings
 from repro.train import OptimConfig, init_opt_state, make_train_step
 from repro.train.optim import state_shardings
-from jax.sharding import NamedSharding, PartitionSpec
+from jax.sharding import NamedSharding
 
 
 def build(args, mesh, restore_step=None):

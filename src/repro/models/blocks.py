@@ -1,7 +1,6 @@
 """Per-family transformer blocks (pre-norm residual structure)."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig

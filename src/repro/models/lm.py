@@ -17,7 +17,6 @@ shared block) mix one unrolled group with a scanned group.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -15,7 +15,6 @@ on-package). Gradient compression options:
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

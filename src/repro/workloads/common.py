@@ -10,7 +10,7 @@ rather than isolated kernels, which is what exposes inter-kernel reuse.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 from repro.core.trace import BYTES, Trace, gemm_parallelism
 

@@ -1,0 +1,29 @@
+"""``kernel.*`` scenarios: measured-structure Pallas kernel touch streams.
+
+Each scenario replays the block placements the static analyzer
+(``repro.check``) extracts from a real kernel's ``pallas_call`` — one touch
+per block fetch, in grid-iteration order — so the sweep engine prices the
+*actual* DMA pattern of the shipped kernels rather than a hand-written
+per-tensor stream (ROADMAP direction 5's kernel->registry bridge).
+
+Names mirror the analyzer catalog: ``kernel.<kernel>.<case>``, e.g.
+``kernel.flash_attention.b2s512``. Building a trace imports jax (the
+kernel is abstract-evaluated, never run); enumerating names does not.
+"""
+from __future__ import annotations
+
+from repro.check import catalog
+from repro.core.trace import Trace
+
+
+def case_names() -> list[str]:
+    """Catalog case names (without the ``kernel.`` prefix)."""
+    return catalog.case_names()
+
+
+def kernel_trace(case: str) -> Trace:
+    """Abstract-trace one catalog case and compile it to a touch stream."""
+    from repro.check import streams  # lazy: pulls in jax via facts
+
+    facts = catalog.trace_case(case)
+    return streams.compile_trace(list(facts), name=f"kernel.{case}")

@@ -12,7 +12,7 @@ from __future__ import annotations
 from functools import lru_cache
 
 from repro.configs import SHAPES, get
-from repro.configs.base import ModelConfig, ShapeConfig
+from repro.configs.base import ModelConfig
 from repro.core.trace import Trace, gemm_parallelism
 from repro.workloads.common import ModelBuilder
 

@@ -16,7 +16,6 @@ Table III (paper):
 """
 from __future__ import annotations
 
-import math
 from functools import lru_cache
 
 from repro.core.trace import Trace

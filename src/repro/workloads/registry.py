@@ -12,7 +12,10 @@ evaluation space by name:
   config;
 * ``lm.<arch>.<shape>`` — the assigned LM architectures x shapes
   (``repro.configs``), e.g. ``lm.deepseek_v2_236b.decode_32k``;
-* ``hpc.<family>.<k>`` — the 130-app Fig-3 HPC proxy population.
+* ``hpc.<family>.<k>`` — the 130-app Fig-3 HPC proxy population;
+* ``kernel.<kernel>.<case>`` — measured-structure touch streams extracted
+  statically from the real Pallas kernels by ``repro.check`` (one touch per
+  block fetch, grid-iteration ordered).
 
 Scale-out *families* (``repro.core.sweep.ScaleOutWorkload``) live behind the
 same namespace with a ``scaleout.`` prefix: each maps an instance count to
@@ -43,11 +46,12 @@ from __future__ import annotations
 
 from fnmatch import fnmatchcase
 from functools import lru_cache
-from typing import Callable, Union
+from typing import Callable
 
 from repro.core.sweep import ScaleOutWorkload
 from repro.core.trace import Trace
 from repro.workloads import hpc as hpc_mod
+from repro.workloads import kernels as kernels_mod
 from repro.workloads import lm as lm_mod
 from repro.workloads import mlperf as mlperf_mod
 
@@ -282,6 +286,20 @@ def _register_hpc() -> None:
             idx += 1
 
 
+def _register_kernels() -> None:
+    # Measured-structure Pallas kernel streams from the static analyzer
+    # (repro.check): one scenario per catalog (kernel, shape) case. The
+    # factory abstract-traces the kernel on first build (jax import deferred
+    # until then); names enumerate import-light like every other namespace.
+    for case in kernels_mod.case_names():
+        kernel = case.split(".", 1)[0]
+        register(
+            f"kernel.{case}",
+            lambda c=case: kernels_mod.kernel_trace(c),
+            suites=(f"kernel.{kernel}", "kernel"),
+        )
+
+
 def _register_scaleout() -> None:
     # Fig-12 fixed-global-batch data-parallel training: n instances split the
     # Table-III large batch, so the per-GPU trace shrinks (strong scaling).
@@ -352,5 +370,6 @@ _register_mlperf()
 _register_serve()
 _register_lm()
 _register_hpc()
+_register_kernels()
 _register_scaleout()
 _register_arrivals()

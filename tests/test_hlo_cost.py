@@ -4,7 +4,6 @@ import subprocess
 import sys
 import textwrap
 
-import pytest
 
 from repro.core.hlo_cost import analyze_hlo_cost
 

@@ -1,10 +1,8 @@
 """Infrastructure tests: data determinism, checkpoint atomicity/resharding,
 watchdog, elastic restart, HLO parsing."""
 import os
-import threading
 import time
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -1,6 +1,5 @@
 """Perf-model invariants + paper-claim validation (loose tolerances)."""
 import numpy as np
-import pytest
 
 from repro.core import copa, hw, perfmodel
 from repro.core.hw import MB

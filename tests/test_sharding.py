@@ -8,7 +8,6 @@ import textwrap
 
 import pytest
 
-import jax
 from jax.sharding import PartitionSpec
 
 from repro.launch.mesh import make_compat_mesh as _mesh

@@ -1,8 +1,6 @@
 """End-to-end behaviour tests for the whole system."""
 import jax
-import jax.numpy as jnp
 import numpy as np
-import pytest
 
 
 def test_train_then_serve_roundtrip(tmp_path):
