@@ -22,6 +22,7 @@ from benchmarks.common import Csv, timed
 from repro.core import copa
 from repro.core.sweep import CostGrid, SweepEngine, serve_cost_grids
 from repro.serve.fleet import FleetSim, instances_to_meet_slo
+from repro.serve.paged import PagedKvSpec
 from repro.serve.sim import ArrivalSpec, LengthDist, Request, Slo, simulate
 
 BENCH = "resnet"
@@ -168,4 +169,56 @@ def bench_serving_fleet(csv: Csv):
     csv.add("serving.fleet.size_256ladder", us, f"{n} instances @p95")
 
 
-ALL = [bench_serving_smoke, bench_serving_fleet]
+def bench_serving_paged(csv: Csv):
+    """Block-table residency overhead in the vectorized fleet core: the
+    paged fast path (page-occupancy columns + commit-budget prefix check)
+    vs plain reservation on the flagship 64x20k row — ASSERTS <= 1.2x —
+    plus the rich policy engine (oversubscription + LRU eviction) on a
+    KV-pressured fleet for the us-per-call trajectory."""
+    mb = 16
+    grid = _fleet_bench_grid(mb)
+    step = float(grid.step_time(mb, 4096.0))
+    n_inst, n_req = 64, 20_000
+    rate = n_inst * 0.8 * mb / (step * 64.0)
+    spec = ArrivalSpec("fleet.bench", rate, n_req,
+                       prompt=LengthDist("fixed", 128),
+                       output=LengthDist("uniform", low=32, high=96))
+    kw = dict(max_batch=mb, kv_capacity_tokens=float("inf"))
+    tag = f"{n_inst}x{n_req // 1000}k"
+
+    _, us_res = _best_of(
+        lambda: FleetSim(grid, n_inst, **kw).run(spec, seed=SEED))
+    rp, us_pag = _best_of(
+        lambda: FleetSim(grid, n_inst, paged=PagedKvSpec(page_size=16),
+                         **kw).run(spec, seed=SEED))
+    overhead = us_pag / us_res
+    csv.add(f"serving.paged.batched_{tag}", us_pag,
+            f"{overhead:.2f}x vs reservation")
+    csv.add(f"serving.paged.reservation_{tag}", us_res,
+            f"{len(rp.step_logs)} logs")
+    # CI floor: page bookkeeping must stay within 1.2x of the reservation
+    # fast path on the flagship row
+    assert overhead <= 1.2, \
+        f"paged fleet overhead regressed to {overhead:.2f}x (> 1.2x floor)"
+
+    # rich engine: oversubscribed pool under genuine KV pressure (evictions
+    # fire), batched core vs the per-instance oracle
+    tight = ArrivalSpec("fleet.paged", rate / 8, 4_000,
+                        prompt=LengthDist("lognormal", mean=400, floor=8),
+                        output=LengthDist("uniform", low=100, high=300))
+    pg = PagedKvSpec(page_size=16, oversubscription=1.5, eviction="lru")
+    kw8 = dict(max_batch=mb, kv_capacity_tokens=8_000.0, paged=pg)
+    rb, us_b = _best_of(
+        lambda: FleetSim(grid, 8, **kw8).run(tight, seed=SEED))
+    ro, us_o = _best_of(
+        lambda: FleetSim(grid, 8, **kw8).run(tight, seed=SEED,
+                                             batched=False))
+    if not (np.array_equal(rb.batch.t_done, ro.batch.t_done)
+            and np.array_equal(rb.batch.evictions, ro.batch.evictions)):
+        raise AssertionError("paged fleet engines diverged under eviction")
+    csv.add("serving.paged.evict_8x4k", us_b,
+            f"{us_o / us_b:.1f}x vs oracle, "
+            f"{int(rb.batch.evictions.sum())} evictions")
+
+
+ALL = [bench_serving_smoke, bench_serving_fleet, bench_serving_paged]

@@ -40,6 +40,18 @@ class MemoryPolicy:
     microbatches: int = 1                # gradient-accumulation depth
     serve_fsdp: bool = True              # False: replicate weights over data
                                          # (kills per-step weight all-gathers)
+    # Buddy-Compression-style KV residency knob (arXiv 1903.02596): the KV
+    # cache is stored compressed in DRAM, multiplying effective capacity by
+    # ``kv_compression_ratio`` at the cost of a fractional bandwidth tax on
+    # every KV byte moved (compress/decompress traffic over the link).
+    kv_compression_ratio: float = 1.0    # >= 1; 1.0 = off
+    kv_compression_bw_tax: float = 0.0   # extra fraction of KV bytes moved
+
+    def __post_init__(self):
+        if self.kv_compression_ratio < 1.0:
+            raise ValueError("kv_compression_ratio must be >= 1")
+        if self.kv_compression_bw_tax < 0.0:
+            raise ValueError("kv_compression_bw_tax must be >= 0")
 
     def describe(self) -> str:
         bits = [
@@ -52,6 +64,9 @@ class MemoryPolicy:
             bits.append("fused_ffn")
         if self.grad_compression:
             bits.append(f"gradcomp={self.grad_compression}")
+        if self.kv_compression_ratio != 1.0:
+            bits.append(f"kvcomp={self.kv_compression_ratio:g}x"
+                        f"(+{self.kv_compression_bw_tax:.0%}bw)")
         return " ".join(bits)
 
 
@@ -133,24 +148,68 @@ def recommend(shape_name: str, n_params: float) -> MemoryPolicy:
 KV_BYTES_PER_ELEM = {"float32": 4, "bfloat16": 2, "float16": 2,
                      "fp8": 1, "int8": 1}
 
+# Fraction of DRAM held back for activations / workspace on top of the
+# resident weights when the reserve is derived from a model config.
+_ACTIVATION_MARGIN = 0.05
+
+
+def kv_reserve_frac(spec, model_config=None) -> float:
+    """The DRAM fraction set aside for weights + activations.
+
+    With a :class:`~repro.configs.base.ModelConfig` the reserve is the
+    model's actual resident weight bytes (``n_params`` at the config's
+    param dtype) plus a small activation margin; without one, the
+    historical conservative 0.30 stands in. Raises when the weights alone
+    leave no room for KV — that config can't serve on this MSM at all."""
+    if model_config is None:
+        return 0.30
+    bytes_per_param = KV_BYTES_PER_ELEM.get(model_config.dtype, 2)
+    frac = (model_config.n_params() * bytes_per_param / spec.dram_capacity
+            + _ACTIVATION_MARGIN)
+    if frac >= 1.0:
+        raise ValueError(
+            f"model {model_config.name} needs {frac:.0%} of DRAM for "
+            f"weights + activations — no capacity left for KV")
+    return frac
+
 
 def kv_token_capacity(spec, policy: MemoryPolicy, elems_per_token: int,
-                      reserve_frac: float = 0.30) -> int:
+                      reserve_frac: float | None = None, *,
+                      model_config=None) -> int:
     """Resident KV tokens one serving instance can hold — the admission
     bound of the request-level simulator (``repro.serve.sim``).
 
-    Usable DRAM (capacity minus the ``reserve_frac`` set aside for weights
-    and activations) over the per-token KV bytes; the element width comes
-    from the policy's ``kv_cache_dtype``, so an int8-KV MSM holds 2x the
-    tokens of a bf16 one, and a COPA MSM with ``dram_capacity_scale`` > 1
-    holds proportionally more — capacity-driven specialization at the
-    serving layer."""
+    Usable DRAM (capacity minus the reserve set aside for weights and
+    activations — derived via :func:`kv_reserve_frac` when ``reserve_frac``
+    is None) over the per-token KV bytes; the element width comes from the
+    policy's ``kv_cache_dtype``, so an int8-KV MSM holds 2x the tokens of a
+    bf16 one, and a COPA MSM with ``dram_capacity_scale`` > 1 holds
+    proportionally more — capacity-driven specialization at the serving
+    layer. The policy's ``kv_compression_ratio`` multiplies the effective
+    capacity (Buddy-Compression residency; the bandwidth tax is priced by
+    the serving cost grids, not here)."""
+    if reserve_frac is None:
+        reserve_frac = kv_reserve_frac(spec, model_config)
     if not 0.0 <= reserve_frac < 1.0:
         raise ValueError("reserve_frac must be in [0, 1)")
     if elems_per_token < 1:
         raise ValueError("elems_per_token must be >= 1")
     per_token = elems_per_token * KV_BYTES_PER_ELEM[policy.kv_cache_dtype]
-    return int((1.0 - reserve_frac) * spec.dram_capacity // per_token)
+    usable = (1.0 - reserve_frac) * spec.dram_capacity \
+        * policy.kv_compression_ratio
+    return int(usable // per_token)
+
+
+def kv_page_capacity(spec, policy: MemoryPolicy, elems_per_token: int,
+                     page_size: int, reserve_frac: float | None = None, *,
+                     model_config=None) -> int:
+    """:func:`kv_token_capacity` in block-table pages: the physical page
+    pool one instance's ``PagedKv`` allocator manages (its oversubscribable
+    commit budget is this times the spec's oversubscription factor)."""
+    if page_size < 1:
+        raise ValueError("page_size must be >= 1")
+    return kv_token_capacity(spec, policy, elems_per_token, reserve_frac,
+                             model_config=model_config) // page_size
 
 
 @dataclass

@@ -848,6 +848,15 @@ class CostGrid:
     count UP to the next ``seq_edges`` bucket (conservative within a
     bucket; counts past the last edge use the last bucket). Lookups are
     vectorized — arrays in, arrays out.
+
+    Under the paged residency model (``repro.serve.paged``) the resident
+    count an engine passes in is ``pages_mapped * page_size`` — mapped
+    pages, not reserved peaks — so a grid built with page-aligned edges
+    (``serve_cost_grids(page_size=...)``) prices resident-PAGE buckets:
+    eviction/recompute shows up as extra prefill charges and smaller
+    resident sweeps, and a compressed-KV policy's bandwidth tax is baked
+    into the bucket sweep times. ``page_size`` here is metadata recording
+    that alignment (None: plain token buckets).
     """
 
     config: str
@@ -855,6 +864,7 @@ class CostGrid:
     seq_edges: tuple[float, ...]      # ascending resident-token bucket edges
     step_time_s: np.ndarray           # (len(batches), len(seq_edges)) seconds
     prefill_s_per_token: float = 0.0
+    page_size: int | None = None      # edges are multiples of this (paged KV)
 
     def __post_init__(self):
         if list(self.batches) != sorted(set(self.batches)) or not self.batches:
@@ -965,6 +975,8 @@ def serve_cost_grids(
     prefill_scenario: str | None = None,
     tokens_per_pass: int = 1,
     scenario_prefix: str = "serve.mlperf",
+    page_size: int | None = None,
+    kv_policy=None,
 ) -> dict[str, CostGrid]:
     """Export (batch x KV-bucket) step-time grids for every config, priced
     from the registry's ``serve.<bench>.b<batch>`` scenarios.
@@ -982,7 +994,17 @@ def serve_cost_grids(
     Prefill pricing: ``prefill_scenario`` names an ``lm.<arch>.prefill_*``
     cell whose trace prices prefill per config (one extra ``time_batch``
     over the prefill chunk — see :func:`prefill_cost_per_token`); it
-    overrides the flat ``prefill_s_per_token`` knob."""
+    overrides the flat ``prefill_s_per_token`` knob.
+
+    Paged residency: ``page_size`` snaps every KV bucket edge UP to the
+    next page multiple (deduplicated, order preserved) so the grid's
+    buckets land on resident-page boundaries — the counts the paged
+    engines actually report. ``kv_policy`` (a
+    :class:`repro.core.msm.MemoryPolicy`) applies its
+    ``kv_compression_bw_tax`` to the per-bucket KV sweep bytes: compressed
+    KV moves ``(1 + tax)`` bytes per resident byte read, pricing the
+    Buddy-Compression bandwidth cost into the same grid whose *capacity*
+    side grows via ``msm.kv_token_capacity``."""
     from repro.workloads import registry  # lazy: workloads sit above core
 
     names = registry.scenarios(f"{scenario_prefix}.{bench}.b")
@@ -999,10 +1021,22 @@ def serve_cost_grids(
         prefill = prefill_cost_per_token(prefill_scenario, configs)
     else:
         prefill = np.full(len(specs), float(prefill_s_per_token))
-    edges = tuple(float(e) for e in seq_edges) if kv_bytes_per_token > 0 \
-        else (float("inf"),)
+    if kv_bytes_per_token > 0:
+        edges = [float(e) for e in seq_edges]
+        if page_size is not None:
+            if page_size < 1:
+                raise ValueError("page_size must be >= 1")
+            snapped = [float(-(-int(e) // page_size) * page_size)
+                       for e in edges if np.isfinite(e)]
+            snapped += [e for e in edges if not np.isfinite(e)]
+            edges = sorted(set(snapped))
+        edges = tuple(edges)
+    else:
+        edges = (float("inf"),)
+    bw_tax = 0.0 if kv_policy is None else float(kv_policy.kv_compression_bw_tax)
     kv = kv_sweep_times(spec_objs,
-                        [e * kv_bytes_per_token for e in edges]) \
+                        [e * kv_bytes_per_token * (1.0 + bw_tax)
+                         for e in edges]) \
         if kv_bytes_per_token > 0 else np.zeros((1, len(specs)))
     out = {}
     for ci, (name, spec) in enumerate(specs):
@@ -1012,6 +1046,7 @@ def serve_cost_grids(
             seq_edges=edges,
             step_time_s=base[:, ci][:, None] + kv[:, ci][None, :],
             prefill_s_per_token=float(prefill[ci]),
+            page_size=page_size,
         )
     return out
 

@@ -89,6 +89,7 @@ class FleetSim:
                  router: str = "least_loaded",
                  max_batch: int | None = None,
                  kv_capacity_tokens: float = float("inf"),
+                 paged=None, sched=None,
                  autoscaler=None, autoscale_interval_s: float = 0.0):
         if router not in ROUTERS:
             raise ValueError(f"unknown router {router!r}; one of {ROUTERS}")
@@ -100,6 +101,8 @@ class FleetSim:
         self.router = router
         self.max_batch = max_batch
         self.kv_capacity_tokens = kv_capacity_tokens
+        self.paged = paged
+        self.sched = sched
         self.autoscaler = autoscaler
         self.autoscale_interval_s = float(autoscale_interval_s)
         self._active: list[Instance] = []
@@ -112,7 +115,8 @@ class FleetSim:
     # -- fleet membership ------------------------------------------------------
     def _spawn(self) -> Instance:
         inst = Instance(self.cost, max_batch=self.max_batch,
-                        kv_capacity_tokens=self.kv_capacity_tokens)
+                        kv_capacity_tokens=self.kv_capacity_tokens,
+                        paged=self.paged, sched=self.sched)
         self._active.append(inst)
         return inst
 
@@ -146,6 +150,7 @@ class FleetSim:
                 self.cost, rb, n_instances=len(self._active),
                 router=self.router, max_batch=self.max_batch,
                 kv_capacity_tokens=self.kv_capacity_tokens,
+                paged=self.paged, sched=self.sched,
                 autoscaler=self.autoscaler,
                 autoscale_interval_s=self.autoscale_interval_s)
         if isinstance(requests, ArrivalSpec):
@@ -233,6 +238,7 @@ def scan_fleet(cost, arrivals: ArrivalSpec | Sequence[Request] | RequestBatch,
                slo: Slo, *,
                router: str = "least_loaded", max_batch: int | None = None,
                kv_capacity_tokens: float = float("inf"),
+               paged=None, sched=None,
                max_instances: int = 64, seed: int = 0,
                batched: bool = True, strategy: str = "bisect"
                ) -> dict[int, SimMetrics]:
@@ -257,7 +263,8 @@ def scan_fleet(cost, arrivals: ArrivalSpec | Sequence[Request] | RequestBatch,
 
     def probe(k: int) -> SimMetrics:
         sim = FleetSim(cost, k, router=router, max_batch=max_batch,
-                       kv_capacity_tokens=kv_capacity_tokens)
+                       kv_capacity_tokens=kv_capacity_tokens,
+                       paged=paged, sched=sched)
         return sim.run(base, seed=seed, batched=batched).metrics
 
     out: dict[int, SimMetrics] = {}
@@ -302,6 +309,7 @@ def latency_goodput_rows(grids: dict[str, "object"], arrivals: ArrivalSpec,
                          rates: Sequence[float], slo: Slo, *,
                          n_instances: int = 1, router: str = "least_loaded",
                          kv_capacity_tokens: float = float("inf"),
+                         paged=None, sched=None,
                          seed: int = 0) -> list[dict]:
     """Comparison-table rows (config x arrival rate): latency percentiles +
     SLO goodput, shared by the examples / launch drivers / benchmarks."""
@@ -310,7 +318,8 @@ def latency_goodput_rows(grids: dict[str, "object"], arrivals: ArrivalSpec,
         spec = arrivals.with_rate(rate)
         for name, grid in grids.items():
             m = FleetSim(grid, n_instances, router=router,
-                         kv_capacity_tokens=kv_capacity_tokens).run(
+                         kv_capacity_tokens=kv_capacity_tokens,
+                         paged=paged, sched=sched).run(
                              spec, seed=seed).metrics
             rows.append({
                 "config": name,

@@ -14,8 +14,11 @@ Layering:
   configurable prompt/output length distributions. Everything is seeded and
   deterministic.
 * :class:`Instance` — ONE serving instance's scheduler state (FIFO waiting
-  queue, running batch, KV reservation). Step costs come from any object
-  with the :class:`~repro.core.sweep.CostGrid` interface: ``max_batch``,
+  queue, running batch, KV residency via a ``repro.serve.paged`` allocator:
+  scalar full reservation by default, a block-table :class:`~repro.serve.
+  paged.PagedKv` when a :class:`~repro.serve.paged.PagedKvSpec` is given).
+  Step costs come from any object with the
+  :class:`~repro.core.sweep.CostGrid` interface: ``max_batch``,
   ``step_time(batch, resident_tokens)``, ``prefill_time(prompt_tokens)``.
 * :func:`simulate` — the single-instance discrete-event loop (heap of
   arrival/step-completion events). ``repro.serve.fleet`` layers N instances
@@ -25,16 +28,26 @@ Layering:
 
 Scheduling model (one engine iteration):
 
-* at a step boundary the instance admits waiting requests FIFO while the
-  batch has a slot and the request's full KV residency (prompt + output
-  tokens) fits the ``kv_capacity_tokens`` budget — reservation is
-  conservative, so admitted work never has to be evicted mid-flight;
+* at a step boundary the instance first resolves page pressure (paged KV
+  with ``oversubscription > 1`` may evict the least-recently-admitted
+  running request back to the FRONT of the waiting queue — its KV is
+  recomputed at re-admission), then admits waiting requests FIFO while the
+  batch has a slot and the allocator accepts the request's committed
+  footprint (full ``prompt + output`` reservation by default; peak *pages*
+  against an oversubscribable commit budget when paged);
 * the iteration interleaves prefill and decode: its duration is the decode
   step cost at the (batch, resident-KV) grid cell plus the prefill cost of
-  every request admitted this step;
-* every running request emits one token per iteration; the first token of a
-  request is produced by the iteration that prefilled it (TTFT = queue wait
-  + prefill + one decode step).
+  every prompt chunk consumed this step (whole prompts at admission by
+  default; bounded by ``SchedPolicy.prefill_chunk`` when chunked);
+* every running request that is past its prompt emits one token per
+  iteration; the first token of a request is produced by the iteration
+  that consumed its last prompt chunk (TTFT = queue wait + prefill + one
+  decode step).
+
+Residency/scheduling policies live in ``repro.serve.paged`` — see its
+docstring for the paged-KV model and the parity contract (``page_size=1``
+with oversubscription disabled reproduces the reservation path
+bit-for-bit).
 """
 from __future__ import annotations
 
@@ -45,6 +58,8 @@ from dataclasses import dataclass, replace
 from typing import Iterable, Sequence
 
 import numpy as np
+
+from repro.serve.paged import PagedKvSpec, SchedPolicy, make_allocator
 
 NAN = float("nan")
 
@@ -64,6 +79,7 @@ class Request:
     t_first_token: float = NAN
     t_done: float = NAN
     tokens_emitted: int = 0
+    evictions: int = 0          # paged KV: times evicted (recompute count)
 
     def __post_init__(self):
         if self.output_tokens < 1:
@@ -117,8 +133,11 @@ class ArrivalSpec:
     ``burst_factor``/``burst_fraction``/``period_s`` modulate a Poisson
     process: within each period the first ``burst_fraction`` runs at
     ``burst_factor`` x the off-phase rate, with the off-phase rate chosen so
-    the long-run mean stays ``rate``. The default is a plain (homogeneous)
-    Poisson process."""
+    the long-run mean stays ``rate``. ``profile`` generalizes that to any
+    piecewise-constant shape: a tuple of relative rate multipliers spread
+    evenly over ``period_s`` (normalized so the long-run mean stays
+    ``rate``) — a recorded diurnal load curve, say. The default is a plain
+    (homogeneous) Poisson process."""
 
     name: str
     rate: float                       # mean requests/s
@@ -128,32 +147,52 @@ class ArrivalSpec:
     burst_factor: float = 1.0
     burst_fraction: float = 0.0
     period_s: float = 0.0
+    profile: tuple[float, ...] = ()   # piecewise-constant relative rates
+
+    def __post_init__(self):
+        if self.profile:
+            prof = np.asarray(self.profile, dtype=float)
+            if (prof < 0).any() or prof.max() <= 0:
+                raise ValueError(
+                    "profile multipliers must be >= 0 with at least one > 0")
+            if self.period_s <= 0:
+                raise ValueError("profile needs period_s > 0")
 
     def with_rate(self, rate: float) -> "ArrivalSpec":
         return replace(self, rate=float(rate))
 
     def _thin_keep(self, t: np.ndarray, peak: float) -> np.ndarray:
         """Instantaneous rate at time ``t`` as a fraction of ``peak``."""
+        phase = np.mod(t, self.period_s) / self.period_s
+        if self.profile:
+            prof = np.asarray(self.profile, dtype=float)
+            idx = np.minimum((phase * len(prof)).astype(np.int64),
+                             len(prof) - 1)
+            return (self.rate * prof[idx] / prof.mean()) / peak
         frac, bf = self.burst_fraction, self.burst_factor
         # off-phase rate keeping the long-run mean at self.rate
         r_off = self.rate / (frac * bf + (1.0 - frac))
         r_on = bf * r_off
-        phase = np.mod(t, self.period_s) / self.period_s
         return np.where(phase < frac, r_on, r_off) / peak
 
     def _sample_arrays(self, seed: int) -> tuple[np.ndarray, np.ndarray,
                                                  np.ndarray]:
         rng = np.random.default_rng(seed)
         n = self.n_requests
-        bursty = self.burst_fraction > 0 and self.burst_factor != 1.0 \
-            and self.period_s > 0
+        bursty = bool(self.profile) or (
+            self.burst_fraction > 0 and self.burst_factor != 1.0
+            and self.period_s > 0)
         if not bursty:
             times = np.cumsum(rng.exponential(1.0 / self.rate, n))
         else:
             # Thinning (Lewis-Shedler): draw at the peak rate, keep with
             # probability rate(t)/peak — exact for piecewise-constant rates.
-            frac, bf = self.burst_fraction, self.burst_factor
-            peak = bf * self.rate / (frac * bf + (1.0 - frac))
+            if self.profile:
+                prof = np.asarray(self.profile, dtype=float)
+                peak = self.rate * prof.max() / prof.mean()
+            else:
+                frac, bf = self.burst_fraction, self.burst_factor
+                peak = bf * self.rate / (frac * bf + (1.0 - frac))
             times_l, t, kept = [], 0.0, 0
             while kept < n:
                 block = max(n - kept, 64) * 2
@@ -217,6 +256,7 @@ class RequestBatch:
     t_first_token: np.ndarray = None
     t_done: np.ndarray = None
     tokens_emitted: np.ndarray = None
+    evictions: np.ndarray = None
 
     def __post_init__(self):
         n = len(self.rid)
@@ -228,6 +268,8 @@ class RequestBatch:
             self.t_done = np.full(n, NAN)
         if self.tokens_emitted is None:
             self.tokens_emitted = np.zeros(n, dtype=np.int64)
+        if self.evictions is None:
+            self.evictions = np.zeros(n, dtype=np.int64)
         if np.any(self.output_tokens < 1):
             raise ValueError("output_tokens must be >= 1")
         if np.any(self.prompt_tokens < 0) or np.any(self.t_arrival < 0):
@@ -271,6 +313,7 @@ class RequestBatch:
         rb.t_done = np.array([r.t_done for r in reqs])
         rb.tokens_emitted = np.array([r.tokens_emitted for r in reqs],
                                      dtype=np.int64)
+        rb.evictions = np.array([r.evictions for r in reqs], dtype=np.int64)
         return rb
 
     def fresh(self) -> "RequestBatch":
@@ -292,6 +335,7 @@ class RequestBatch:
             r.t_first_token = float(self.t_first_token[i])
             r.t_done = float(self.t_done[i])
             r.tokens_emitted = int(self.tokens_emitted[i])
+            r.evictions = int(self.evictions[i])
             out.append(r)
         return out
 
@@ -300,7 +344,11 @@ class RequestBatch:
 
 @dataclass
 class StepLog:
-    """Per-iteration schedule record (numpy views over the run)."""
+    """Per-iteration schedule record (numpy views over the run).
+
+    ``kv_reserved`` is the committed KV footprint in token units (paged:
+    committed pages x page_size); ``pages`` is the mapped-page demand of
+    the iteration (0 under full reservation, which maps nothing)."""
 
     t_start: np.ndarray
     t_end: np.ndarray
@@ -308,18 +356,20 @@ class StepLog:
     kv_reserved: np.ndarray
     queued: np.ndarray       # waiting-queue depth after admission
     admitted: np.ndarray
+    pages: np.ndarray        # mapped KV pages during the iteration
 
     @classmethod
     def from_rows(cls, rows: list[tuple]) -> "StepLog":
         if not rows:
-            cols = np.empty((6, 0), dtype=float)
+            cols = np.empty((7, 0), dtype=float)
         else:
             # zip(*rows) transposes at C speed — much faster than
             # np.array() introspecting a list of tuples row by row
             cols = [np.asarray(c, dtype=float) for c in zip(*rows)]
         return cls(t_start=cols[0], t_end=cols[1],
                    batch=cols[2].astype(int), kv_reserved=cols[3],
-                   queued=cols[4].astype(int), admitted=cols[5].astype(int))
+                   queued=cols[4].astype(int), admitted=cols[5].astype(int),
+                   pages=cols[6].astype(int))
 
 
 class Instance:
@@ -328,21 +378,42 @@ class Instance:
     The event loop (here or in ``repro.serve.fleet``) drives it with
     ``submit`` at arrival events and ``finish_step`` at step completions;
     ``start_step`` returns the completion time to schedule (or None when
-    idle). ``load`` is what routers and the autoscaler observe."""
+    idle). ``load`` is what routers and the autoscaler observe.
+
+    KV residency goes through a ``repro.serve.paged`` allocator: the
+    default is the scalar full-reservation :class:`~repro.serve.paged.
+    ReservedKv` (the pre-paging behavior, bit-for-bit); a
+    :class:`~repro.serve.paged.PagedKvSpec` swaps in the block-table
+    :class:`~repro.serve.paged.PagedKv`. A :class:`~repro.serve.paged.
+    SchedPolicy` selects chunked-prefill / decode-priority scheduling on
+    the same hook. Each iteration is planned at ``start_step`` as
+    ``(request, prompt chunk consumed, emits-a-token)`` triples; the plan
+    is replayed by ``finish_step`` so both phases agree on what the
+    iteration did."""
 
     def __init__(self, cost, max_batch: int | None = None,
-                 kv_capacity_tokens: float = float("inf")):
+                 kv_capacity_tokens: float = float("inf"),
+                 paged: PagedKvSpec | None = None,
+                 sched: SchedPolicy | None = None):
         self.cost = cost
         self.max_batch = int(max_batch if max_batch is not None
                              else cost.max_batch)
         if self.max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         self.kv_capacity_tokens = float(kv_capacity_tokens)
+        self.paged = paged
+        self.sched = sched if sched is not None else SchedPolicy()
+        self.alloc = make_allocator(self.kv_capacity_tokens, paged)
         self.waiting: deque[Request] = deque()
         self.running: list[Request] = []
-        self.kv_reserved = 0.0
         self.busy = False
+        self._plan: list[tuple[Request, int, bool]] = []
         self._log_rows: list[tuple] = []
+
+    @property
+    def kv_reserved(self) -> float:
+        """Committed KV footprint in token units (allocator-backed)."""
+        return self.alloc.committed_tokens
 
     @property
     def load(self) -> int:
@@ -353,66 +424,134 @@ class Instance:
         return not self.busy and self.load == 0
 
     def submit(self, req: Request) -> None:
-        if req.kv_tokens > self.kv_capacity_tokens:
+        if not self.alloc.fits(req.kv_tokens):
+            if self.paged is None:
+                raise ValueError(
+                    f"request {req.rid} needs {req.kv_tokens} KV tokens; "
+                    f"instance capacity is {self.kv_capacity_tokens:.0f} — "
+                    f"it can never be admitted")
             raise ValueError(
-                f"request {req.rid} needs {req.kv_tokens} KV tokens; instance "
-                f"capacity is {self.kv_capacity_tokens:.0f} — it can never be "
-                f"admitted")
+                f"request {req.rid} needs "
+                f"{self.alloc.pages_for(req.kv_tokens)} KV pages; instance "
+                f"capacity is {self.alloc.capacity_pages} — it can never "
+                f"be admitted")
         self.waiting.append(req)
 
-    def _admit(self, now: float) -> int:
-        admitted = 0
-        while self.waiting and len(self.running) < self.max_batch:
-            req = self.waiting[0]
-            if self.kv_reserved + req.kv_tokens > self.kv_capacity_tokens:
-                break  # FIFO: no skipping past the blocked head
-            self.waiting.popleft()
-            req.t_admitted = now
-            self.kv_reserved += req.kv_tokens
-            self.running.append(req)
-            admitted += 1
-        return admitted
-
     def start_step(self, now: float) -> float | None:
-        """Admit + begin one iteration; returns its completion time, or
-        None when there is nothing to run."""
+        """Evict (paged, over-pressure) + admit + begin one iteration;
+        returns its completion time, or None when there is nothing to
+        run."""
         if self.busy:
             raise RuntimeError("instance already mid-step")
-        admitted = self._admit(now)
+        paged = self.alloc.page_size is not None
+        chunk_cap = self.sched.prefill_chunk
+        # -- plan the iteration for the carried-over running batch ------------
+        plan: list[tuple[Request, int, bool]] = []
+        demands: list[int] = []
+        demand = 0
+        for r in self.running:
+            rem = r._ctx - r._consumed
+            chunk = 0 if rem <= 0 else \
+                (rem if chunk_cap is None or chunk_cap >= rem else chunk_cap)
+            emits = chunk >= rem
+            plan.append((r, chunk, emits))
+            if paged:
+                d = self.alloc.pages_for(r._consumed + chunk + r._res_em)
+                demands.append(d)
+                demand += d
+        # -- evict LRU (least-recently-admitted) under page pressure ----------
+        if paged and demand > self.alloc.capacity_pages:
+            victims: list[Request] = []
+            while demand > self.alloc.capacity_pages:
+                r, _, _ = plan.pop(0)
+                self.running.pop(0)
+                demand -= demands.pop(0)
+                self.alloc.release(r.rid)
+                r.evictions += 1
+                victims.append(r)
+            # back to the FRONT of the queue, mutual order preserved; their
+            # KV (prompt + emitted so far) is recomputed at re-admission
+            self.waiting.extendleft(reversed(victims))
+        # -- FIFO admission ---------------------------------------------------
+        admitted = 0
+        mid_prefill = any(not emits for _, _, emits in plan)
+        while self.waiting and len(self.running) < self.max_batch:
+            if self.sched.decode_priority and self.running \
+                    and (mid_prefill or admitted):
+                break
+            req = self.waiting[0]
+            if not self.alloc.can_admit(req.kv_tokens):
+                break  # FIFO: no skipping past the blocked head
+            base = req.prompt_tokens + req.tokens_emitted
+            chunk = base if chunk_cap is None or chunk_cap >= base \
+                else chunk_cap
+            emits = chunk >= base
+            if paged:
+                d = self.alloc.pages_for(chunk)
+                if demand + d > self.alloc.capacity_pages:
+                    break  # admission must never trigger eviction
+                demands.append(d)
+                demand += d
+            self.waiting.popleft()
+            if math.isnan(req.t_admitted):
+                req.t_admitted = now
+            req._ctx = base
+            req._consumed = 0
+            req._res_em = 0
+            self.alloc.admit(req.rid, req.kv_tokens)
+            self.running.append(req)
+            plan.append((req, chunk, emits))
+            admitted += 1
         if not self.running:
             return None
-        prefill = sum(self.cost.prefill_time(r.prompt_tokens)
-                      for r in self.running[-admitted:]) if admitted else 0.0
-        resident = sum(r.prompt_tokens + r.tokens_emitted
-                       for r in self.running)
+        # -- map pages + price the iteration ----------------------------------
+        prefill = 0.0
+        resident = 0
+        for idx, (r, chunk, _) in enumerate(plan):
+            if paged:
+                self.alloc.ensure(r.rid, demands[idx])
+            else:
+                resident += r._consumed + chunk + r._res_em
+            if chunk:
+                prefill += self.cost.prefill_time(chunk)
+        if paged:
+            # priced at page granularity: mapped pages x page_size tokens
+            resident = demand * self.alloc.page_size
         dt = self.cost.step_time(len(self.running), resident) + prefill
         if not (dt > 0 and math.isfinite(dt)):
             raise ValueError(f"non-positive/non-finite step time {dt!r}")
         t_end = now + dt
         self._log_rows.append((now, t_end, len(self.running),
-                               self.kv_reserved, len(self.waiting), admitted))
+                               self.alloc.committed_tokens,
+                               len(self.waiting), admitted, float(demand)))
+        self._plan = plan
         self.busy = True
         return t_end
 
     def finish_step(self, now: float) -> list[Request]:
-        """Emit one token per running request; complete + release finished
-        ones. Returns the completions."""
+        """Replay the iteration's plan: advance prefill progress, emit one
+        token per decoding request, complete + release finished ones.
+        Returns the completions."""
         if not self.busy:
             raise RuntimeError("no step in flight")
         self.busy = False
         done: list[Request] = []
         still: list[Request] = []
-        for r in self.running:
-            r.tokens_emitted += 1
-            if r.tokens_emitted == 1:
-                r.t_first_token = now
-            if r.tokens_emitted >= r.output_tokens:
-                r.t_done = now
-                self.kv_reserved -= r.kv_tokens
-                done.append(r)
-            else:
-                still.append(r)
+        for r, chunk, emits in self._plan:
+            r._consumed += chunk
+            if emits:
+                r.tokens_emitted += 1
+                r._res_em += 1
+                if r.tokens_emitted == 1:
+                    r.t_first_token = now
+                if r.tokens_emitted >= r.output_tokens:
+                    r.t_done = now
+                    self.alloc.release(r.rid, r.kv_tokens)
+                    done.append(r)
+                    continue
+            still.append(r)
         self.running = still
+        self._plan = []
         return done
 
     def step_log(self) -> StepLog:
@@ -544,23 +683,29 @@ def fresh_requests(requests: Iterable[Request]) -> list[Request]:
     scanned over several fleet sizes) must be re-materialized per run —
     without this, run 2 would see run 1's tokens as already emitted."""
     return sorted((replace(r, t_admitted=NAN, t_first_token=NAN, t_done=NAN,
-                           tokens_emitted=0) for r in requests),
+                           tokens_emitted=0, evictions=0) for r in requests),
                   key=lambda r: (r.t_arrival, r.rid))
 
 
 def simulate(requests: Iterable[Request], cost, *,
              max_batch: int | None = None,
-             kv_capacity_tokens: float = float("inf")) -> SimResult:
+             kv_capacity_tokens: float = float("inf"),
+             paged: PagedKvSpec | None = None,
+             sched: SchedPolicy | None = None) -> SimResult:
     """Run one instance over an open-loop arrival stream to completion.
 
     A heap-ordered discrete-event loop: arrival events enqueue into the
     instance; step-completion events emit tokens and immediately start the
     next iteration while work remains. Deterministic given the request list
-    (which is copied, so one list can drive many runs).
+    (which is copied, so one list can drive many runs). ``paged``/``sched``
+    select the KV residency and scheduling policies (see
+    ``repro.serve.paged``); the defaults preserve the full-reservation
+    behavior exactly.
     """
     reqs = fresh_requests(requests)
     inst = Instance(cost, max_batch=max_batch,
-                    kv_capacity_tokens=kv_capacity_tokens)
+                    kv_capacity_tokens=kv_capacity_tokens,
+                    paged=paged, sched=sched)
     events: list[tuple[float, int, int]] = []  # (time, seq, kind)
     seq = 0
     for r in reqs:

@@ -366,6 +366,45 @@ def _register_arrivals() -> None:
                           suites=("arrivals.burst", "arrivals"))
 
 
+# Production-shaped diurnal load curves: hourly rate multipliers over one
+# 24-"hour" day (time-compressed to DIURNAL_PERIOD_S so a 512-request trace
+# spans a couple of days), normalized by ArrivalSpec so the long-run mean
+# stays at the nominal rate. Shapes follow the usual published fleet
+# telemetry: chat peaks evenings with a midday shoulder, api tracks
+# business hours, batch inverts (overnight queue drain).
+DIURNAL_PROFILES = {
+    "chat": (0.2, 0.15, 0.1, 0.1, 0.1, 0.15, 0.3, 0.5, 0.8, 1.2, 1.5, 1.6,
+             1.5, 1.4, 1.5, 1.6, 1.7, 1.8, 1.9, 1.8, 1.5, 1.1, 0.7, 0.4),
+    "api": (0.3, 0.25, 0.2, 0.2, 0.2, 0.3, 0.5, 0.9, 1.4, 1.8, 1.9, 2.0,
+            1.9, 1.9, 2.0, 1.9, 1.8, 1.5, 1.0, 0.7, 0.5, 0.4, 0.35, 0.3),
+    "batch": (2.2, 2.4, 2.5, 2.3, 1.8, 1.2, 0.8, 0.6, 0.5, 0.5, 0.5, 0.6,
+              0.6, 0.6, 0.6, 0.6, 0.7, 0.7, 0.8, 0.9, 1.1, 1.4, 1.8, 2.1),
+}
+DIURNAL_PERIOD_S = 4.0
+_DIURNAL_LENGTHS = {         # (prompt dist, output dist) per workload shape
+    "chat": (("lognormal", 512.0, 16), (32, 256)),
+    "api": (("lognormal", 256.0, 8), (16, 128)),
+    "batch": (("lognormal", 1024.0, 64), (64, 512)),
+}
+
+
+def _register_diurnal() -> None:
+    def diurnal(kind: str):
+        from repro.serve.sim import ArrivalSpec, LengthDist
+
+        (pk, pmean, pfloor), (olo, ohi) = _DIURNAL_LENGTHS[kind]
+        return ArrivalSpec(
+            name=f"arrivals.diurnal.{kind}", rate=64.0, n_requests=512,
+            prompt=LengthDist(pk, mean=pmean, floor=pfloor),
+            output=LengthDist("uniform", low=olo, high=ohi),
+            period_s=DIURNAL_PERIOD_S, profile=DIURNAL_PROFILES[kind])
+
+    for kind in DIURNAL_PROFILES:
+        register_arrivals(f"arrivals.diurnal.{kind}",
+                          lambda kind=kind: diurnal(kind),
+                          suites=("arrivals.diurnal", "arrivals"))
+
+
 _register_mlperf()
 _register_serve()
 _register_lm()
@@ -373,3 +412,4 @@ _register_hpc()
 _register_kernels()
 _register_scaleout()
 _register_arrivals()
+_register_diurnal()

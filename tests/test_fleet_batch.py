@@ -43,14 +43,15 @@ def assert_same_result(a, b):
     """Bit-identity between two FleetResults (batched vs oracle)."""
     ab, bb = a.batch, b.batch
     for col in ("rid", "t_arrival", "prompt_tokens", "output_tokens",
-                "t_admitted", "t_first_token", "t_done", "tokens_emitted"):
+                "t_admitted", "t_first_token", "t_done", "tokens_emitted",
+                "evictions"):
         x, y = getattr(ab, col), getattr(bb, col)
         assert np.array_equal(x, y, equal_nan=(x.dtype.kind == "f")), \
             f"batch col {col} differs"
     assert len(a.step_logs) == len(b.step_logs)
     for k, (la, lb) in enumerate(zip(a.step_logs, b.step_logs)):
         for col in ("t_start", "t_end", "batch", "kv_reserved",
-                    "queued", "admitted"):
+                    "queued", "admitted", "pages"):
             assert np.array_equal(getattr(la, col), getattr(lb, col)), \
                 f"step log {k} col {col} differs"
     assert a.n_instances_final == b.n_instances_final

@@ -1,0 +1,383 @@
+"""Paged KV residency: allocator units + engine parity + policy behavior.
+
+The PR's contract, pinned field-for-field: with oversubscription disabled
+and ``page_size=1`` the paged path reproduces the reservation path's
+request timings BIT-FOR-BIT in both the heap oracle and the batched fleet
+loop; every paged/policy mode is itself bit-identical batched-vs-oracle.
+Randomized versions of the allocator invariants live in
+tests/test_paged_properties.py (hypothesis-gated).
+"""
+import numpy as np
+import pytest
+
+from repro.core import copa, msm
+from repro.core.sweep import CostGrid, serve_cost_grids
+from repro.serve.fleet import FleetSim
+from repro.serve.paged import (
+    PagedKv,
+    PagedKvSpec,
+    ReservedKv,
+    SchedPolicy,
+    make_allocator,
+    pages_for,
+)
+from repro.serve.sim import ArrivalSpec, LengthDist, Request, simulate
+
+INF = float("inf")
+
+
+def ramp_grid(batches=(1, 2, 4, 8, 64), prefill=1e-5):
+    edges = (64.0, 512.0, 4096.0, INF)
+    tab = np.asarray([[1e-3 + 5e-5 * b + 2e-6 * j for j in range(len(edges))]
+                      for b in batches])
+    return CostGrid("ramp", tuple(batches), edges, tab,
+                    prefill_s_per_token=prefill)
+
+
+def heavy_spec(rate=900.0, n=400):
+    return ArrivalSpec("paged", rate, n,
+                       prompt=LengthDist("lognormal", mean=400, floor=8),
+                       output=LengthDist("uniform", low=100, high=300))
+
+
+def assert_same_result(a, b, *, skip_pages=False):
+    ab, bb = a.batch, b.batch
+    for col in ("rid", "t_arrival", "prompt_tokens", "output_tokens",
+                "t_admitted", "t_first_token", "t_done", "tokens_emitted",
+                "evictions"):
+        x, y = getattr(ab, col), getattr(bb, col)
+        assert np.array_equal(x, y, equal_nan=(x.dtype.kind == "f")), \
+            f"batch col {col} differs"
+    assert len(a.step_logs) == len(b.step_logs)
+    cols = ["t_start", "t_end", "batch", "queued", "admitted"]
+    if not skip_pages:
+        cols += ["kv_reserved", "pages"]
+    for k, (la, lb) in enumerate(zip(a.step_logs, b.step_logs)):
+        for col in cols:
+            assert np.array_equal(getattr(la, col), getattr(lb, col)), \
+                f"step log {k} col {col} differs"
+    assert a.n_instances_final == b.n_instances_final
+    assert a.scale_events == b.scale_events
+
+
+# -- allocator units -----------------------------------------------------------
+
+def test_paged_spec_validation():
+    with pytest.raises(ValueError):
+        PagedKvSpec(page_size=0)
+    with pytest.raises(ValueError):
+        PagedKvSpec(oversubscription=0.0)
+    with pytest.raises(ValueError):
+        PagedKvSpec(eviction="mru")
+    with pytest.raises(ValueError):
+        PagedKvSpec(oversubscription=1.5)   # > 1 needs an eviction policy
+    PagedKvSpec(oversubscription=1.5, eviction="lru")
+    with pytest.raises(ValueError):
+        SchedPolicy(prefill_chunk=0)
+    assert SchedPolicy().is_default
+    assert not SchedPolicy(prefill_chunk=64).is_default
+
+
+def test_pages_for():
+    assert pages_for(0, 16) == 0
+    assert pages_for(1, 16) == 1
+    assert pages_for(16, 16) == 1
+    assert pages_for(17, 16) == 2
+
+
+def test_paged_allocator_ledgers():
+    a = PagedKv(160.0, PagedKvSpec(page_size=16, oversubscription=2.0,
+                                   eviction="lru"))
+    assert a.capacity_pages == 10 and a.commit_budget == 20.0
+    assert a.fits(160) and not a.fits(161)
+    a.admit(0, 100)                       # peak 7 pages committed
+    assert a.committed_pages == 7 and a.pages_mapped == 0
+    with pytest.raises(RuntimeError):
+        a.admit(0, 100)                   # double admit
+    a.ensure(0, 3)
+    assert a.page_table[0] == [0, 1, 2]   # deterministic ascending ids
+    a.ensure(0, 2)                        # never shrinks
+    assert a.pages_mapped == 3
+    a.admit(1, 160)
+    assert a.can_admit(48) and not a.can_admit(49)   # commit bound: 20 pages
+    a.ensure(1, 7)
+    assert a.pages_mapped == 10 and a.page_table[1] == [3, 4, 5, 6, 7, 8, 9]
+    with pytest.raises(RuntimeError):
+        a.ensure(0, 4)                    # physical pool exhausted
+    a.release(0)
+    assert a.pages_mapped == 7 and a.committed_pages == 10
+    a.admit(2, 48)
+    a.ensure(2, 3)                        # freed pages recycled ascending
+    assert a.page_table[2] == [0, 1, 2]
+    a.release(1), a.release(2)
+    assert a.pages_mapped == 0 and a.committed_pages == 0
+    assert sorted(a._free) == list(range(10))
+
+
+def test_reserved_allocator_is_the_oracle():
+    r = make_allocator(100.0, None)
+    assert isinstance(r, ReservedKv) and r.page_size is None
+    assert isinstance(make_allocator(100.0, PagedKvSpec()), PagedKv)
+    r.admit(0, 60)
+    assert r.can_admit(40) and not r.can_admit(41)
+    assert r.committed_tokens == 60.0 and r.pages_mapped == 0
+    r.release(0, 60)
+    assert r.committed_tokens == 0.0
+
+
+def test_infinite_capacity_paged():
+    a = PagedKv(INF, PagedKvSpec(page_size=8))
+    assert a.fits(10**9) and a.can_admit(10**9)
+    a.admit(0, 100)
+    a.ensure(0, 5)
+    assert a.page_table[0] == [0, 1, 2, 3, 4] and a.pages_mapped == 5
+    a.release(0)
+    assert a.pages_mapped == 0
+
+
+# -- the parity contract -------------------------------------------------------
+
+def test_oracle_paged_p1_bit_identical_to_reservation():
+    reqs = heavy_spec(rate=500.0, n=250).generate(3)
+    cost = ramp_grid()
+    r0 = simulate([r for r in reqs], cost, kv_capacity_tokens=6000.0)
+    r1 = simulate([r for r in reqs], cost, kv_capacity_tokens=6000.0,
+                  paged=PagedKvSpec(page_size=1))
+    for a, b in zip(r0.requests, r1.requests):
+        assert a.t_admitted == b.t_admitted
+        assert a.t_first_token == b.t_first_token
+        assert a.t_done == b.t_done
+        assert a.tokens_emitted == b.tokens_emitted and b.evictions == 0
+    l0, l1 = r0.step_log, r1.step_log
+    for col in ("t_start", "t_end", "batch", "kv_reserved", "queued",
+                "admitted"):
+        assert np.array_equal(getattr(l0, col), getattr(l1, col)), col
+    # P=1 mapped pages ARE the reservation path's resident-KV sum
+    assert l1.pages.sum() > 0
+
+
+@pytest.mark.parametrize("router", ["least_loaded", "round_robin"])
+def test_fleet_paged_p1_bit_identical_to_reservation(router):
+    spec = heavy_spec()
+    kw = dict(n_instances=3, router=router, kv_capacity_tokens=8000.0)
+    rres = FleetSim(ramp_grid(), **kw).run(spec, seed=0)
+    rpag = FleetSim(ramp_grid(), paged=PagedKvSpec(page_size=1), **kw).run(
+        spec, seed=0)
+    rpag_o = FleetSim(ramp_grid(), paged=PagedKvSpec(page_size=1), **kw).run(
+        spec, seed=0, batched=False)
+    # paged batched == paged oracle, including the pages column
+    assert_same_result(rpag, rpag_o)
+    # paged == reservation on every shared field (pages differ by design:
+    # reservation logs 0, P=1 logs the resident sum)
+    assert_same_result(rpag, rres, skip_pages=True)
+    for lp, lr in zip(rpag.step_logs, rres.step_logs):
+        assert np.array_equal(lp.kv_reserved, lr.kv_reserved)
+
+
+@pytest.mark.parametrize("page_size", [4, 16, 64])
+def test_fleet_paged_batched_matches_oracle(page_size):
+    spec = heavy_spec()
+    kw = dict(n_instances=3, kv_capacity_tokens=9000.0,
+              paged=PagedKvSpec(page_size=page_size))
+    rb = FleetSim(ramp_grid(), **kw).run(spec, seed=0)
+    ro = FleetSim(ramp_grid(), **kw).run(spec, seed=0, batched=False)
+    assert_same_result(rb, ro)
+    assert max(lg.pages.max() for lg in rb.step_logs) > 0
+
+
+@pytest.mark.parametrize("sched", [
+    SchedPolicy(prefill_chunk=48),
+    SchedPolicy(decode_priority=True),
+    SchedPolicy(prefill_chunk=48, decode_priority=True),
+])
+def test_fleet_policy_variants_batched_matches_oracle(sched):
+    spec = heavy_spec(rate=600.0, n=300)
+    for paged in (None, PagedKvSpec(page_size=16)):
+        kw = dict(n_instances=2, kv_capacity_tokens=9000.0, paged=paged,
+                  sched=sched)
+        rb = FleetSim(ramp_grid(), **kw).run(spec, seed=1)
+        ro = FleetSim(ramp_grid(), **kw).run(spec, seed=1, batched=False)
+        assert_same_result(rb, ro)
+
+
+def test_fleet_oversubscription_eviction_batched_matches_oracle():
+    spec = heavy_spec()
+    kw = dict(n_instances=2, kv_capacity_tokens=12_000.0,
+              paged=PagedKvSpec(page_size=16, oversubscription=1.5,
+                                eviction="lru"))
+    rb = FleetSim(ramp_grid(), **kw).run(spec, seed=0)
+    ro = FleetSim(ramp_grid(), **kw).run(spec, seed=0, batched=False)
+    assert_same_result(rb, ro)
+    # pressure actually evicted, yet every request completed in full
+    assert rb.batch.evictions.sum() > 0
+    assert np.array_equal(rb.batch.tokens_emitted, rb.batch.output_tokens)
+    # physical page bound respected at every logged step
+    cap_pages = int(12_000 // 16)
+    for lg in rb.step_logs:
+        assert (lg.pages <= cap_pages).all()
+
+
+def test_oversubscription_admits_more_than_physical():
+    # one instance, commit budget 2x physical: committed KV in the step log
+    # exceeds what full reservation could ever hold
+    spec = heavy_spec(rate=2000.0, n=200)
+    kw = dict(n_instances=1, kv_capacity_tokens=8_000.0)
+    pg = PagedKvSpec(page_size=16, oversubscription=2.0, eviction="lru")
+    r = FleetSim(ramp_grid(), paged=pg, **kw).run(spec, seed=0)
+    assert max(lg.kv_reserved.max() for lg in r.step_logs) > 8_000.0
+
+
+# -- scheduling policy behavior ------------------------------------------------
+
+def test_chunked_prefill_closed_form():
+    # one request, prompt 100, chunk 30: tokens stream out only after the
+    # 4th iteration consumes the final 10-token chunk (prefill priced per
+    # chunk, decode steps follow)
+    cost = ramp_grid(prefill=1e-4)
+    req = [Request(rid=0, t_arrival=0.0, prompt_tokens=100, output_tokens=3)]
+    res = simulate(req, cost, sched=SchedPolicy(prefill_chunk=30))
+    lg = res.step_log
+    # 4 prefill iterations (30/30/30/10; the last also emits) + 2 decodes
+    assert len(lg.t_start) == 6
+    r = res.requests[0]
+    chunks = [30, 30, 30, 10]
+    t = 0.0
+    kv_read = 0
+    for c in chunks:
+        t += cost.step_time(1, kv_read + c) + c * 1e-4
+        kv_read += c
+    assert r.t_first_token == pytest.approx(t)
+    # unchunked run gets its first token in ONE (more expensive) iteration
+    res1 = simulate([Request(rid=0, t_arrival=0.0, prompt_tokens=100,
+                             output_tokens=3)], cost)
+    assert len(res1.step_log.t_start) == 3
+    assert res1.requests[0].t_first_token == pytest.approx(
+        cost.step_time(1, 100) + 100 * 1e-4)
+
+
+def test_decode_priority_admission_pattern():
+    spec = heavy_spec(rate=1500.0, n=200)
+    r = FleetSim(ramp_grid(), n_instances=1, kv_capacity_tokens=20_000.0,
+                 sched=SchedPolicy(decode_priority=True)).run(spec, seed=0)
+    lg = r.step_logs[0]
+    # >1 admissions only when the batch was empty before the step (the batch
+    # IS the admitted set); a non-empty batch takes at most one newcomer
+    multi = lg.admitted > 1
+    assert np.array_equal(lg.batch[multi], lg.admitted[multi])
+    # default policy admits in bulk under the same pressure
+    r0 = FleetSim(ramp_grid(), n_instances=1,
+                  kv_capacity_tokens=20_000.0).run(spec, seed=0)
+    lg0 = r0.step_logs[0]
+    assert (lg0.admitted[lg0.batch > lg0.admitted] > 1).any()
+
+
+def test_submit_rejects_never_admissible_paged():
+    cost = ramp_grid()
+    req = [Request(rid=0, t_arrival=0.0, prompt_tokens=500, output_tokens=4)]
+    for batched in (True, False):
+        with pytest.raises(ValueError, match="KV pages"):
+            FleetSim(cost, 1, kv_capacity_tokens=100.0,
+                     paged=PagedKvSpec(page_size=16)).run(
+                         req, batched=batched)
+
+
+# -- msm / sweep layers --------------------------------------------------------
+
+def test_kv_token_capacity_derived_reserve():
+    from repro.configs.base import ModelConfig
+
+    base = copa.GPU_N_BASE.build()
+    pol = msm.DECODE_MSM
+    elems = 32768
+    # fallback unchanged: no model config -> the historical 0.30
+    assert msm.kv_reserve_frac(base) == 0.30
+    c_fallback = msm.kv_token_capacity(base, pol, elems)
+    assert c_fallback == int(0.7 * base.dram_capacity // (elems * 2))
+    mc = ModelConfig(name="toy8b", family="dense", n_layers=32, d_model=4096,
+                     n_heads=32, n_kv_heads=8, d_ff=14336, vocab_size=128256)
+    rf = msm.kv_reserve_frac(base, mc)
+    want = mc.n_params() * 2 / base.dram_capacity + 0.05
+    assert rf == pytest.approx(want)
+    assert msm.kv_token_capacity(base, pol, elems, model_config=mc) \
+        == int((1.0 - rf) * base.dram_capacity // (elems * 2))
+    # a model whose weights swamp DRAM cannot serve at all
+    huge = ModelConfig(name="huge", family="dense", n_layers=400,
+                       d_model=16384, n_heads=128, n_kv_heads=16,
+                       d_ff=65536, vocab_size=128256)
+    with pytest.raises(ValueError, match="no capacity left"):
+        msm.kv_reserve_frac(base, huge)
+
+
+def test_kv_compression_capacity_and_pages():
+    base = copa.GPU_N_BASE.build()
+    pol = msm.DECODE_MSM
+    elems = 32768
+    c = msm.kv_token_capacity(base, pol, elems)
+    comp = msm.compose("msm_decode", kv_compression_ratio=2.0,
+                       kv_compression_bw_tax=0.25)
+    assert msm.kv_token_capacity(base, comp, elems) == 2 * c
+    assert "kvcomp=2x" in comp.describe()
+    assert msm.kv_page_capacity(base, pol, elems, 16) == c // 16
+    with pytest.raises(ValueError):
+        msm.kv_page_capacity(base, pol, elems, 0)
+    with pytest.raises(ValueError):
+        msm.compose("msm_decode", kv_compression_ratio=0.5)
+    with pytest.raises(ValueError):
+        msm.compose("msm_decode", kv_compression_bw_tax=-0.1)
+
+
+def test_serve_cost_grids_page_buckets_and_bw_tax():
+    configs = [copa.GPU_N_BASE, copa.HBML_L3]
+    kvb = 2 * 1024 * 2.0     # bytes per resident KV token
+    edges = (100.0, 1000.0, 10_000.0)
+    plain = serve_cost_grids("gnmt", configs, tokens_per_pass=50,
+                             kv_bytes_per_token=kvb, seq_edges=edges)
+    paged = serve_cost_grids("gnmt", configs, tokens_per_pass=50,
+                             kv_bytes_per_token=kvb, seq_edges=edges,
+                             page_size=64)
+    for g in paged.values():
+        # edges snapped UP to page multiples: 100->128, 1000->1024, 10k->10048
+        assert g.seq_edges == (128.0, 1024.0, 10_048.0)
+        assert g.page_size == 64
+    for g in plain.values():
+        assert g.seq_edges == edges and g.page_size is None
+    # compression bandwidth tax makes every KV-heavy bucket strictly slower
+    comp = msm.compose("msm_decode", kv_compression_ratio=2.0,
+                       kv_compression_bw_tax=0.25)
+    taxed = serve_cost_grids("gnmt", configs, tokens_per_pass=50,
+                             kv_bytes_per_token=kvb, seq_edges=edges,
+                             kv_policy=comp)
+    for name in plain:
+        assert (taxed[name].step_time_s >= plain[name].step_time_s).all()
+        assert (taxed[name].step_time_s[:, -1]
+                > plain[name].step_time_s[:, -1]).all()
+    # ratio-only compression (no tax) prices identically
+    free = serve_cost_grids("gnmt", configs, tokens_per_pass=50,
+                            kv_bytes_per_token=kvb, seq_edges=edges,
+                            kv_policy=msm.compose(
+                                "msm_decode", kv_compression_ratio=2.0))
+    for name in plain:
+        assert np.array_equal(free[name].step_time_s,
+                              plain[name].step_time_s)
+
+
+def test_diurnal_arrivals_registered_and_shaped():
+    from repro.workloads import registry
+
+    names = registry.arrival_names("arrivals.diurnal")
+    assert len(names) >= 2
+    for name in names:
+        spec = registry.arrivals(name)
+        reqs = spec.generate(0)
+        ts = np.array([r.t_arrival for r in reqs])
+        assert (np.diff(ts) > 0).all()
+        # long-run mean rate preserved within sampling noise
+        assert 0.8 * spec.rate <= len(ts) / ts[-1] <= 1.2 * spec.rate
+        # peak-phase hours carry well over their uniform share
+        prof = np.asarray(spec.profile)
+        phase = np.mod(ts, spec.period_s) / spec.period_s
+        idx = np.minimum((phase * len(prof)).astype(np.int64), len(prof) - 1)
+        rel = np.asarray(spec.profile) / prof.mean()
+        hi_share = (rel[idx] > 1.25).mean()
+        hi_frac = (rel > 1.25).mean()
+        assert hi_share > 1.2 * hi_frac

@@ -1,0 +1,128 @@
+"""Hypothesis property tests for the paged KV allocator and engines:
+block-table ledger invariants over random admit/ensure/release programs,
+and batched-vs-oracle bit parity over randomized paged/policy fleets."""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sweep import CostGrid
+from repro.serve.fleet import FleetSim
+from repro.serve.paged import PagedKv, PagedKvSpec, SchedPolicy, pages_for
+from repro.serve.sim import Request
+
+INF = float("inf")
+
+
+def check_ledgers(a: PagedKv) -> None:
+    mapped = sum(len(p) for p in a.page_table.values())
+    assert a.pages_mapped == mapped, "mapped ledger out of sync"
+    assert a.committed_pages == sum(a._committed.values())
+    assert a.committed_pages <= a.commit_budget, "oversubscription bound"
+    if a._free is not None:
+        # free + mapped == total, and no page double-mapped or leaked
+        pages = [pg for p in a.page_table.values() for pg in p]
+        assert len(set(pages)) == len(pages), "page double-mapped"
+        assert len(a._free) + mapped == a.capacity_pages
+        assert set(a._free).isdisjoint(pages)
+        assert set(a._free) | set(pages) == set(range(a.capacity_pages))
+
+
+ops_st = st.lists(
+    st.tuples(st.sampled_from(["admit", "ensure", "release"]),
+              st.integers(min_value=0, max_value=7),      # rid
+              st.integers(min_value=1, max_value=200)),   # kv tokens / pages
+    min_size=1, max_size=60,
+)
+
+
+@settings(max_examples=100, deadline=None)
+@given(ops=ops_st,
+       page_size=st.sampled_from([1, 4, 16]),
+       cap_pages=st.integers(min_value=4, max_value=40),
+       oversub=st.sampled_from([1.0, 1.5, 3.0]))
+def test_allocator_ledger_invariants(ops, page_size, cap_pages, oversub):
+    spec = PagedKvSpec(page_size=page_size, oversubscription=oversub,
+                       eviction="none" if oversub == 1.0 else "lru")
+    a = PagedKv(float(cap_pages * page_size), spec)
+    live: dict[int, int] = {}   # rid -> committed kv tokens
+    for op, rid, arg in ops:
+        if op == "admit" and rid not in live:
+            if a.fits(arg) and a.can_admit(arg):
+                a.admit(rid, arg)
+                live[rid] = arg
+        elif op == "ensure" and rid in live:
+            want = min(pages_for(arg, page_size), pages_for(live[rid],
+                                                            page_size))
+            # the engine only asks for what fits physically
+            grow = want - len(a.page_table[rid])
+            if grow > 0 and (a._free is None or grow <= len(a._free)):
+                a.ensure(rid, want)
+        elif op == "release" and rid in live:
+            a.release(rid, live.pop(rid))
+        check_ledgers(a)
+    for rid in list(live):
+        a.release(rid, live.pop(rid))
+    check_ledgers(a)
+    assert a.pages_mapped == 0 and a.committed_pages == 0
+
+
+requests_st = st.lists(
+    st.tuples(
+        st.floats(min_value=0.0, max_value=0.05, allow_nan=False),
+        st.integers(min_value=0, max_value=40),    # prompt tokens
+        st.integers(min_value=1, max_value=8),     # output tokens
+    ),
+    min_size=1, max_size=40,
+)
+
+paged_st = st.one_of(
+    st.none(),
+    st.builds(PagedKvSpec,
+              page_size=st.sampled_from([1, 4, 16]),
+              oversubscription=st.sampled_from([1.0, 2.0]),
+              eviction=st.just("lru")),
+)
+
+sched_st = st.builds(SchedPolicy,
+                     prefill_chunk=st.sampled_from([None, 7, 16]),
+                     decode_priority=st.booleans())
+
+
+def _cost():
+    batches = (1, 2, 4)
+    edges = (16.0, 128.0, INF)
+    tab = np.asarray([[1e-3 + 1e-5 * b + 1e-6 * j for j in range(3)]
+                      for b in batches])
+    return CostGrid("prop", batches, edges, tab, prefill_s_per_token=1e-4)
+
+
+@settings(max_examples=40, deadline=None)
+@given(reqs=requests_st, paged=paged_st, sched=sched_st,
+       n_instances=st.integers(min_value=1, max_value=3),
+       kv_cap=st.sampled_from([INF, 96.0, 512.0]))
+def test_paged_fleet_parity_randomized(reqs, paged, sched, n_instances,
+                                       kv_cap):
+    # capacity always physically fits the largest possible request (48 KV
+    # tokens -> 48 pages at page_size 1)
+    requests = [Request(rid=i, t_arrival=t, prompt_tokens=p, output_tokens=o)
+                for i, (t, p, o) in enumerate(reqs)]
+    kw = dict(n_instances=n_instances, max_batch=4,
+              kv_capacity_tokens=kv_cap, paged=paged, sched=sched)
+    rb = FleetSim(_cost(), **kw).run(requests, seed=0)
+    ro = FleetSim(_cost(), **kw).run(requests, seed=0, batched=False)
+    for col in ("t_admitted", "t_first_token", "t_done", "tokens_emitted",
+                "evictions"):
+        x, y = getattr(rb.batch, col), getattr(ro.batch, col)
+        assert np.array_equal(x, y, equal_nan=(x.dtype.kind == "f")), col
+    for la, lb in zip(rb.step_logs, ro.step_logs):
+        for col in ("t_start", "t_end", "batch", "kv_reserved", "queued",
+                    "admitted", "pages"):
+            assert np.array_equal(getattr(la, col), getattr(lb, col)), col
+    # conservation under every policy mix: all requests complete in full
+    assert np.array_equal(rb.batch.tokens_emitted, rb.batch.output_tokens)
+    if paged is not None and np.isfinite(kv_cap):
+        cap_pages = int(kv_cap // paged.page_size)
+        for lg in rb.step_logs:
+            assert (lg.pages <= cap_pages).all()
