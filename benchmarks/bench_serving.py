@@ -221,4 +221,49 @@ def bench_serving_paged(csv: Csv):
             f"{int(rb.batch.evictions.sum())} evictions")
 
 
-ALL = [bench_serving_smoke, bench_serving_fleet, bench_serving_paged]
+def bench_serving_obs(csv: Csv):
+    """Post-hoc observability priced against the engine it derives from:
+    ``Timeline.derive`` + the windowed ``timeseries`` rollup on the
+    flagship 64x20k fleet run — pure numpy over the run's own artifacts —
+    ASSERTS <= 15% of the batched sim's cost (the CI floor). Building the
+    Chrome-trace JSON event dicts is serialization, not derivation, so it
+    gets its own un-floored row for the us-per-call trajectory."""
+    from repro.obs.series import timeseries
+    from repro.obs.timeline import Timeline, chrome_trace
+    from repro.serve.sim import ObsConfig
+
+    mb = 16
+    grid = _fleet_bench_grid(mb)
+    step = float(grid.step_time(mb, 4096.0))
+    n_inst, n_req = 64, 20_000
+    rate = n_inst * 0.8 * mb / (step * 64.0)
+    spec = ArrivalSpec("fleet.bench", rate, n_req,
+                       prompt=LengthDist("fixed", 128),
+                       output=LengthDist("uniform", low=32, high=96))
+    kw = dict(max_batch=mb, kv_capacity_tokens=float("inf"),
+              obs=ObsConfig(level=1))
+    tag = f"{n_inst}x{n_req // 1000}k"
+
+    res, us_sim = _best_of(
+        lambda: FleetSim(grid, n_inst, **kw).run(spec, seed=SEED))
+    window = res.metrics.makespan_s / 50.0
+
+    (tl, series), us_derive = _best_of(
+        lambda: (Timeline.derive(res), timeseries(res, window)))
+    frac = us_derive / us_sim
+    csv.add(f"serving.obs.derive_{tag}", us_derive,
+            f"{frac:.2f}x of batched sim ({tl.n_steps_total} steps, "
+            f"{len(series)} windows)")
+    # CI floor: deriving the timeline + the windowed rollup must stay a
+    # rounding error next to the simulation itself
+    assert frac <= 0.15, \
+        f"obs derivation costs {frac:.2f}x of the batched sim (> 0.15 floor)"
+
+    doc, us_ser = _best_of(
+        lambda: chrome_trace(tl), reps=1)
+    csv.add(f"serving.obs.chrome_trace_{tag}", us_ser,
+            f"{len(doc['traceEvents'])} events (serialization, un-floored)")
+
+
+ALL = [bench_serving_smoke, bench_serving_fleet, bench_serving_paged,
+       bench_serving_obs]

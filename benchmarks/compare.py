@@ -1,0 +1,93 @@
+"""Diff two ``BENCH_*.json`` perf snapshots row by row.
+
+    PYTHONPATH=src python -m benchmarks.compare BASELINE.json NEW.json \
+        [--threshold 1.25] [--fail-on-regression]
+
+Each snapshot is the ``{name: us_per_call}`` dict ``benchmarks.run --json``
+writes. Rows are joined by name: the ratio column is new/old (>1 means
+slower), regressions past ``--threshold`` are flagged ``REGRESSED`` and
+rows only one side has are listed as added/removed rather than silently
+dropped. ``benchmarks.run --compare BASELINE.json`` prints the same table
+against the run it just timed.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def compare_rows(old: dict, new: dict,
+                 threshold: float = 1.25) -> list[dict]:
+    """Join two snapshots into one row per benchmark name.
+
+    Row status: ``ok`` / ``REGRESSED`` (ratio > threshold) / ``improved``
+    (ratio < 1/threshold) for shared names; ``added`` / ``removed`` for
+    one-sided names (their ratio is None)."""
+    rows = []
+    for name in sorted(set(old) | set(new)):
+        o, n = old.get(name), new.get(name)
+        if o is None or n is None:
+            rows.append({"name": name, "old_us": o, "new_us": n,
+                         "ratio": None,
+                         "status": "added" if o is None else "removed"})
+            continue
+        ratio = n / o if o > 0 else float("inf")
+        if ratio > threshold:
+            status = "REGRESSED"
+        elif ratio < 1.0 / threshold:
+            status = "improved"
+        else:
+            status = "ok"
+        rows.append({"name": name, "old_us": o, "new_us": n,
+                     "ratio": ratio, "status": status})
+    return rows
+
+
+def format_table(rows: list[dict]) -> str:
+    w = max((len(r["name"]) for r in rows), default=4)
+    hdr = (f"{'name':<{w}s} {'old us':>12s} {'new us':>12s} "
+           f"{'ratio':>7s}  status")
+    out = [hdr, "-" * len(hdr)]
+    for r in rows:
+        o = f"{r['old_us']:12.1f}" if r["old_us"] is not None else " " * 12
+        n = f"{r['new_us']:12.1f}" if r["new_us"] is not None else " " * 12
+        rat = f"{r['ratio']:7.2f}" if r["ratio"] is not None else "      -"
+        out.append(f"{r['name']:<{w}s} {o} {n} {rat}  {r['status']}")
+    reg = sum(r["status"] == "REGRESSED" for r in rows)
+    imp = sum(r["status"] == "improved" for r in rows)
+    out.append(f"{len(rows)} rows: {reg} regressed, {imp} improved")
+    return "\n".join(out)
+
+
+def compare_files(old_path: str, new_path: str,
+                  threshold: float = 1.25) -> list[dict]:
+    with open(old_path) as f:
+        old = json.load(f)
+    with open(new_path) as f:
+        new = json.load(f)
+    return compare_rows(old, new, threshold)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m benchmarks.compare",
+        description="diff two BENCH_*.json perf snapshots")
+    ap.add_argument("baseline", help="old {name: us} snapshot")
+    ap.add_argument("new", help="new {name: us} snapshot")
+    ap.add_argument("--threshold", type=float, default=1.25,
+                    help="ratio above which a row is REGRESSED "
+                         "(default 1.25)")
+    ap.add_argument("--fail-on-regression", action="store_true",
+                    help="exit 1 when any row regressed")
+    ns = ap.parse_args(argv)
+    rows = compare_files(ns.baseline, ns.new, ns.threshold)
+    print(format_table(rows))
+    if ns.fail_on_regression and any(r["status"] == "REGRESSED"
+                                     for r in rows):
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -22,6 +22,10 @@ def main() -> None:
                          "function name matches any (e.g. fig11,core_suite)")
     ap.add_argument("--json", default=None, metavar="OUT",
                     help="also write {name: us_per_call} JSON to OUT")
+    ap.add_argument("--compare", default=None, metavar="BASELINE",
+                    help="diff this run against a saved BENCH_*.json "
+                         "snapshot (informational; see benchmarks.compare "
+                         "for the gating CLI)")
     args = ap.parse_args()
     only = args.only.split(",") if args.only else None
 
@@ -44,6 +48,12 @@ def main() -> None:
         with open(args.json, "w") as f:
             json.dump(csv.as_json_dict(), f, indent=2, sort_keys=True)
             f.write("\n")
+    if args.compare:
+        from benchmarks.compare import compare_rows, format_table
+
+        with open(args.compare) as f:
+            baseline = json.load(f)
+        print(format_table(compare_rows(baseline, csv.as_json_dict())))
     if csv.errors:
         print(f"{len(csv.errors)} benchmark(s) errored: {', '.join(csv.errors)}",
               file=sys.stderr)

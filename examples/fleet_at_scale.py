@@ -10,7 +10,11 @@ vs DL-COPA MSMs from the sweep engine's cost-grid export). The workflow:
    O(log N) sizes, and each probe runs the batched engine
    (``repro.serve.fleetbatch``), which prices a 200-instance x 20k-request
    fleet in well under a second;
-3. print the probed ladder per config plus the smallest SLO-meeting size.
+3. print the probed ladder per config plus the smallest SLO-meeting size;
+4. re-run the winning GPU-N fleet with the obs column on and drop its
+   Chrome-trace timeline (``fleet_at_scale_timeline.json`` — open in
+   chrome://tracing or https://ui.perfetto.dev) plus a windowed metric
+   table showing the burst cycles beating against the SLO.
 
 The batched engine is bit-identical to the per-instance reference loop
 (``FleetSim.run(..., batched=False)`` — asserted in
@@ -27,8 +31,9 @@ sys.path.insert(0, "src")
 
 from repro.core import copa
 from repro.core.sweep import serve_cost_grids
-from repro.serve.fleet import scan_fleet
-from repro.serve.sim import ArrivalSpec, LengthDist, Slo
+from repro.obs.timeline import write_chrome_trace
+from repro.serve.fleet import FleetSim, scan_fleet
+from repro.serve.sim import ArrivalSpec, LengthDist, ObsConfig, Slo
 
 KV_BYTES_PER_TOKEN = 8 * 1024 * 2 * 4      # gnmt decoder KV proxy
 
@@ -40,6 +45,9 @@ def main():
     ap.add_argument("--requests", type=int, default=20_000)
     ap.add_argument("--max-instances", type=int, default=320)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace-out", default="fleet_at_scale_timeline.json",
+                    help="Chrome-trace timeline of the sized GPU-N fleet "
+                         "('' to skip)")
     args = ap.parse_args()
 
     grids = serve_cost_grids(
@@ -66,6 +74,7 @@ def main():
           f"{args.requests} requests; SLO: p{slo.percentile:.0f} "
           f"TTFT<={slo.ttft_s * 1e3:.0f}ms TPOT<={slo.tpot_s * 1e3:.1f}ms")
 
+    sized = {}
     for name, grid in grids.items():
         t0 = time.perf_counter()
         scanned = scan_fleet(grid, arrivals, slo,
@@ -80,6 +89,21 @@ def main():
             else f">{args.max_instances} (cap)"
         print(f"{name:<12} probed [{ladder}] -> {answer} "
               f"({len(scanned)} probes, {dt:.1f}s)")
+        if met:
+            sized[name] = min(met)
+
+    if args.trace_out and "GPU-N" in sized:
+        # one more batched run of the answer-sized fleet, obs column on,
+        # and the whole run becomes a browsable timeline + metric table
+        n = sized["GPU-N"]
+        res = FleetSim(grids["GPU-N"], n,
+                       obs=ObsConfig(level=1)).run(arrivals, seed=args.seed)
+        doc = write_chrome_trace(args.trace_out, res, max_requests=2_000)
+        series = res.timeseries(res.metrics.makespan_s / 12, slo=slo)
+        print(f"\ntimeline of the {n}-instance GPU-N fleet -> "
+              f"{args.trace_out} ({len(doc['traceEvents'])} events; "
+              f"chrome://tracing)")
+        print(series.table())
 
 
 if __name__ == "__main__":

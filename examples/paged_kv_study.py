@@ -23,6 +23,12 @@ while on HBML+L3 — whose MSM already bought enough DRAM that the batch
 bound binds first — the same knob is pure bandwidth tax and GROWS the
 fleet. Which route wins is a property of the config, not of compression.
 
+The run also drops a Chrome-trace timeline of the most eviction-pressured
+cell (open ``paged_kv_timeline.json`` in chrome://tracing or
+https://ui.perfetto.dev) and prints its windowed metric rollup — the
+``repro.obs`` view of where inside the diurnal profile the evictions and
+the TTFT tail actually live.
+
     PYTHONPATH=src python examples/paged_kv_study.py [--fleet 12]
 """
 import argparse
@@ -34,9 +40,10 @@ sys.path.insert(0, "src")
 from repro.configs.base import ModelConfig
 from repro.core import copa, msm
 from repro.core.sweep import serve_cost_grids
+from repro.obs.timeline import write_chrome_trace
 from repro.serve.fleet import FleetSim, instances_to_meet_slo
 from repro.serve.paged import PagedKvSpec
-from repro.serve.sim import Slo
+from repro.serve.sim import ObsConfig, Slo
 from repro.workloads import registry
 
 # A dense 29B MHA model: full-width K+V per layer per token, so KV is
@@ -66,6 +73,9 @@ def main():
     ap.add_argument("--fleet", type=int, default=12,
                     help="fixed fleet size for the goodput column")
     ap.add_argument("--max-instances", type=int, default=48)
+    ap.add_argument("--trace-out", default="paged_kv_timeline.json",
+                    help="Chrome-trace timeline of the most evicting cell "
+                         "('' to skip)")
     args = ap.parse_args()
 
     trace = registry.arrivals("arrivals.diurnal.chat")
@@ -89,6 +99,7 @@ def main():
     print(hdr)
     print("-" * len(hdr))
     fleet_for = {}
+    hot = None          # (evictions, cell label, grid, kw) — worst cell
     t0 = time.time()
     for cfg in CONFIGS:
         spec = cfg.build()
@@ -107,13 +118,29 @@ def main():
                     max_instances=args.max_instances, **kw)
                 res = FleetSim(grid, args.fleet, **kw).run(trace, seed=SEED)
                 m = res.metrics
+                evs = int(res.batch.evictions.sum())
                 print(f"{cfg.name:10s} {pol:4s} {oversub:7.1f} {cap:9.0f} "
                       f"{str(n):>5s} {m.goodput_rps(slo):7.1f}r/s "
                       f"{m.percentile('ttft', 95):8.3f}s "
-                      f"{int(res.batch.evictions.sum()):5d}")
+                      f"{evs:5d}")
+                if hot is None or evs > hot[0]:
+                    hot = (evs, f"{cfg.name}/{pol}/x{oversub}", grid, kw)
                 if oversub == 1.0:
                     fleet_for[cfg.name, pol] = n
     print(f"\n[{time.time() - t0:.1f}s total]")
+
+    if args.trace_out:
+        # re-run the worst cell with the obs column on: the timeline gets
+        # prefill/decode phase naming on its step spans (timing is
+        # bit-identical with the knob on — asserted in tests/test_obs.py)
+        _, label, grid, kw = hot
+        res = FleetSim(grid, args.fleet, obs=ObsConfig(level=1),
+                       **kw).run(trace, seed=SEED)
+        doc = write_chrome_trace(args.trace_out, res, max_requests=2_000)
+        series = res.timeseries(res.metrics.makespan_s / 12, slo=slo)
+        print(f"\ntimeline of {label} -> {args.trace_out} "
+              f"({len(doc['traceEvents'])} events; chrome://tracing)")
+        print(series.table())
 
     n_base_off = fleet_for["GPU-N", "off"]
     n_base_2x = fleet_for["GPU-N", "2x"]

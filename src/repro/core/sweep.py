@@ -78,6 +78,11 @@ from repro.core.trace import Trace
 
 LAUNCH_OVERHEAD_S = 2.0e-6  # per-kernel launch/dependency latency
 
+# Resource axis order of the component stack returned by
+# ``components=True`` / :meth:`SuiteAnalysis.component_batch`
+# (``repro.obs.explain`` ranks per-cell bottlenecks from it).
+TIME_COMPONENTS = ("math", "llc", "uhb", "dram")
+
 # Math throughput class per trace precision.
 _TENSOR_CORE = {"fp16", "bf16", "int8", "fp8"}
 
@@ -144,6 +149,7 @@ def _bottleneck_time_matrix(
     ideal_dram: bool,
     ideal_mem_other: bool,
     ideal_occupancy: bool,
+    components: bool = False,
 ) -> np.ndarray:
     """THE bottleneck time model as one (config x op) matrix — the single
     implementation behind :meth:`TraceAnalysis.time_batch` (ops of one
@@ -154,7 +160,12 @@ def _bottleneck_time_matrix(
     ``dram_rows(spec)`` the total DRAM-traffic row for the relevant
     capacities. Every step is elementwise per op column.
     ``TraceAnalysis._reference_time`` stays a deliberate per-spec copy —
-    it is the parity oracle this matrix is tested against."""
+    it is the parity oracle this matrix is tested against.
+
+    With ``components=True`` the four per-resource pressure matrices are
+    returned stacked as ``(4, n_specs, n_ops)`` in :data:`TIME_COMPONENTS`
+    order, WITHOUT the launch overhead — ``stack.max(axis=0) + overhead``
+    reproduces the default return exactly (asserted in tests)."""
     n_ops = len(flops)
     if ideal_occupancy:
         occ = np.ones((len(specs), n_ops))
@@ -195,6 +206,8 @@ def _bottleneck_time_matrix(
         dram_tot = np.stack([dram_rows(sp) for sp in specs])
         t_dram = dram_tot / dram_bw
 
+    if components:
+        return np.stack([t_math, t_l2, t_uhb, t_dram])
     overhead = 0.0 if ideal_occupancy else LAUNCH_OVERHEAD_S
     return np.maximum.reduce([t_math, t_l2, t_uhb, t_dram]) + overhead
 
@@ -656,6 +669,26 @@ class SuiteAnalysis:
             [t_op[:, self.op_slice(i)].sum(axis=1)
              for i in range(self.n_traces)], axis=1,
         ) if self.n_traces else np.zeros((len(specs), 0))
+
+    def component_batch(self, specs: Sequence[GpuSpec]) -> np.ndarray:
+        """Per-resource component times of the bottleneck model, shape
+        ``(4, len(specs), n_ops_total)`` in :data:`TIME_COMPONENTS` order
+        (math, llc, uhb, dram). ``stack.max(axis=0) + LAUNCH_OVERHEAD_S``
+        reproduces ``time_batch(per_op=True)`` exactly (asserted in
+        tests) — this is the raw material ``repro.obs.explain`` ranks
+        per-cell bottlenecks from."""
+        specs = list(specs)
+        if not specs:
+            return np.zeros((4, 0, len(self.flops)))
+        self.prefetch({c for sp in specs
+                       for c in TraceAnalysis.capacities_for(sp)})
+        return _bottleneck_time_matrix(
+            specs, self.flops, self.is_tc, self._occupancy, self.l2_touch,
+            uhb_rows=lambda sp: self._level_rows(sp.l2_capacity),
+            dram_rows=lambda sp: np.add(*self._level_rows(_dram_cap(sp))),
+            ideal_dram=False, ideal_mem_other=False, ideal_occupancy=False,
+            components=True,
+        )
 
     def attribution_grid(
         self, specs: Sequence[GpuSpec]

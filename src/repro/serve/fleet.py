@@ -31,6 +31,7 @@ from typing import Sequence
 from repro.serve.sim import (
     ArrivalSpec,
     Instance,
+    ObsConfig,
     Request,
     RequestBatch,
     SimMetrics,
@@ -57,6 +58,7 @@ class FleetResult:
     step_logs: list[StepLog]          # one per instance ever active
     n_instances_final: int            # active (non-draining) at completion
     scale_events: list[ScaleEvent] = field(default_factory=list)
+    n_instances_initial: int | None = None   # fleet size before any autoscale
 
     @property
     def requests(self) -> list[Request]:
@@ -70,6 +72,12 @@ class FleetResult:
     def n_instances_peak(self) -> int:
         return max((e.n_active for e in self.scale_events),
                    default=self.n_instances_final)
+
+    def timeseries(self, window_s: float, *, slo: Slo | None = None):
+        """Windowed :class:`repro.obs.series.MetricSeries` rollup — the
+        per-window goodput/percentile/occupancy view of this run."""
+        from repro.obs.series import timeseries
+        return timeseries(self, window_s, slo=slo)
 
 
 _ARRIVAL, _STEP_DONE, _TICK = 0, 1, 2
@@ -90,7 +98,8 @@ class FleetSim:
                  max_batch: int | None = None,
                  kv_capacity_tokens: float = float("inf"),
                  paged=None, sched=None,
-                 autoscaler=None, autoscale_interval_s: float = 0.0):
+                 autoscaler=None, autoscale_interval_s: float = 0.0,
+                 obs: ObsConfig | None = None):
         if router not in ROUTERS:
             raise ValueError(f"unknown router {router!r}; one of {ROUTERS}")
         if n_instances < 1:
@@ -105,6 +114,8 @@ class FleetSim:
         self.sched = sched
         self.autoscaler = autoscaler
         self.autoscale_interval_s = float(autoscale_interval_s)
+        self.obs = obs
+        self._n_initial = int(n_instances)
         self._active: list[Instance] = []
         self._draining: list[Instance] = []
         self._retired: list[Instance] = []
@@ -116,7 +127,7 @@ class FleetSim:
     def _spawn(self) -> Instance:
         inst = Instance(self.cost, max_batch=self.max_batch,
                         kv_capacity_tokens=self.kv_capacity_tokens,
-                        paged=self.paged, sched=self.sched)
+                        paged=self.paged, sched=self.sched, obs=self.obs)
         self._active.append(inst)
         return inst
 
@@ -152,7 +163,8 @@ class FleetSim:
                 kv_capacity_tokens=self.kv_capacity_tokens,
                 paged=self.paged, sched=self.sched,
                 autoscaler=self.autoscaler,
-                autoscale_interval_s=self.autoscale_interval_s)
+                autoscale_interval_s=self.autoscale_interval_s,
+                obs=self.obs)
         if isinstance(requests, ArrivalSpec):
             requests = requests.generate(seed)
         elif isinstance(requests, RequestBatch):
@@ -229,6 +241,7 @@ class FleetSim:
             step_logs=logs,
             n_instances_final=len(self._active),
             scale_events=scale_events,
+            n_instances_initial=self._n_initial,
         )
         out._requests = reqs
         return out
@@ -238,7 +251,7 @@ def scan_fleet(cost, arrivals: ArrivalSpec | Sequence[Request] | RequestBatch,
                slo: Slo, *,
                router: str = "least_loaded", max_batch: int | None = None,
                kv_capacity_tokens: float = float("inf"),
-               paged=None, sched=None,
+               paged=None, sched=None, obs: ObsConfig | None = None,
                max_instances: int = 64, seed: int = 0,
                batched: bool = True, strategy: str = "bisect"
                ) -> dict[int, SimMetrics]:
@@ -264,7 +277,7 @@ def scan_fleet(cost, arrivals: ArrivalSpec | Sequence[Request] | RequestBatch,
     def probe(k: int) -> SimMetrics:
         sim = FleetSim(cost, k, router=router, max_batch=max_batch,
                        kv_capacity_tokens=kv_capacity_tokens,
-                       paged=paged, sched=sched)
+                       paged=paged, sched=sched, obs=obs)
         return sim.run(base, seed=seed, batched=batched).metrics
 
     out: dict[int, SimMetrics] = {}

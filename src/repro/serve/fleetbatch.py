@@ -66,7 +66,8 @@ from collections import deque
 import numpy as np
 
 from repro.serve.paged import PagedKvSpec, SchedPolicy
-from repro.serve.sim import RequestBatch, SimMetrics, StepLog
+from repro.serve.sim import ObsConfig, RequestBatch, SimMetrics, StepLog
+from repro.serve.sim import _obs_phases as _obs_on
 
 # Below this many candidates/completions the scalar path beats numpy-call
 # overhead; both paths are exact, so the cutover is pure perf.
@@ -109,7 +110,8 @@ def run_fleet(cost, batch: RequestBatch, *, n_instances: int = 1,
               kv_capacity_tokens: float = float("inf"),
               paged: PagedKvSpec | None = None,
               sched: SchedPolicy | None = None,
-              autoscaler=None, autoscale_interval_s: float = 0.0):
+              autoscaler=None, autoscale_interval_s: float = 0.0,
+              obs: ObsConfig | None = None):
     """One batched fleet run over ``batch`` (consumed via a fresh copy).
 
     Semantics are exactly ``FleetSim.run(batched=False)``; see the module
@@ -139,8 +141,12 @@ def run_fleet(cost, batch: RequestBatch, *, n_instances: int = 1,
         return _run_fleet_rich(cost, batch, n_instances=n_instances,
                                router=router, mb=mb, cap=cap, paged=paged,
                                sched=sched, autoscaler=autoscaler,
-                               interval=interval)
+                               interval=interval, obs=obs)
     round_robin = router == "round_robin"
+    # ObsConfig level 1: step-log rows carry an 8th column (prefill tokens
+    # consumed by the iteration) — a value the admission loops already sum,
+    # so the extra work is one tuple concat per logged step.
+    OBS = _obs_on(obs)
 
     b = batch.fresh()
     n = len(b)
@@ -268,17 +274,19 @@ def run_fleet(cost, batch: RequestBatch, *, n_instances: int = 1,
         spawn()
     rebuild_active()
 
-    def admit(i: int, now: float) -> tuple[list[int], float]:
+    def admit(i: int, now: float) -> tuple[list[int], float, int]:
         """FIFO admission bounded by batch slots and the committed-unit
         prefix (no skipping past a blocked head) — the oracle's admission
-        loop. Returns (admitted rows, their summed prefill time)."""
+        loop. Returns (admitted rows, their summed prefill time, their
+        summed prompt tokens — the fast path prefills whole prompts at
+        admission, so that sum IS the iteration's prefill-token count)."""
         h, w = wait_h[i], wait_q[i]
         lim = len(w) - h
         slots = mb - nrun[i]
         if slots < lim:
             lim = slots
         if lim <= 0:
-            return (), 0.0
+            return (), 0.0, 0
         cap_left = budget - kvres[i]
         if lim <= _VEC_CUTOVER:
             m, acc = 0, 0
@@ -293,7 +301,7 @@ def run_fleet(cost, batch: RequestBatch, *, n_instances: int = 1,
             csum = np.cumsum(cu_arr[w[h:h + lim]])
             m = int(np.searchsorted(csum, cap_left, side="right"))
         if m == 0:
-            return (), 0.0
+            return (), 0.0, 0
         rows = w[h:h + m]
         wait_h[i] = h + m
         if h + m > 512 and (h + m) * 2 >= len(w):
@@ -340,7 +348,7 @@ def run_fleet(cost, batch: RequestBatch, *, n_instances: int = 1,
         nrun[i] += m
         sum_p[i] += tot_p
         sum_as[i] += m * k
-        return rows, prefill
+        return rows, prefill, tot_p
 
     # -- the global event loop -------------------------------------------------
     # Steps live in the heap as (t_end, seq, instance); arrivals stay a
@@ -486,6 +494,7 @@ def run_fleet(cost, batch: RequestBatch, *, n_instances: int = 1,
                     sa_i += m * k_i
                 else:
                     rows = ()
+                    tot_p = 0   # no admissions -> no prefill this iteration
                 if nr == 0:
                     busy[i] = False
                     break
@@ -504,11 +513,10 @@ def run_fleet(cost, batch: RequestBatch, *, n_instances: int = 1,
                             f"non-positive/non-finite step time {dt!r}")
                 t_end = tcur + dt
                 if PF:
-                    logs_i.append((tcur, t_end, nr, kvr * P, len(w) - h,
-                                   m, mp_i))
+                    lrow = (tcur, t_end, nr, kvr * P, len(w) - h, m, mp_i)
                 else:
-                    logs_i.append((tcur, t_end, nr, kvr, len(w) - h, m,
-                                   0.0))
+                    lrow = (tcur, t_end, nr, kvr, len(w) - h, m, 0.0)
+                logs_i.append(lrow + (tot_p,) if OBS else lrow)
                 if m:
                     if m <= _VEC_CUTOVER:
                         for r in rows:
@@ -556,7 +564,7 @@ def run_fleet(cost, batch: RequestBatch, *, n_instances: int = 1,
             arr_ptr += 1
             if busy[i]:
                 continue
-            rows, prefill = admit(i, Ta)
+            rows, prefill, ptoks = admit(i, Ta)
             bsz = nrun[i]
             if bsz == 0:
                 continue
@@ -573,9 +581,10 @@ def run_fleet(cost, batch: RequestBatch, *, n_instances: int = 1,
             if not (dt > 0 and math.isfinite(dt)):
                 raise ValueError(f"non-positive/non-finite step time {dt!r}")
             t_end = Ta + dt
-            logs[i].append((Ta, t_end, bsz, kvres[i] * P if PF else kvres[i],
-                            len(wait_q[i]) - wait_h[i], len(rows),
-                            float(mapped[i]) if PF else 0.0))
+            lrow = (Ta, t_end, bsz, kvres[i] * P if PF else kvres[i],
+                    len(wait_q[i]) - wait_h[i], len(rows),
+                    float(mapped[i]) if PF else 0.0)
+            logs[i].append(lrow + (ptoks,) if OBS else lrow)
             if rows:
                 # the iteration that prefills a request emits its first token
                 if len(rows) <= _VEC_CUTOVER:
@@ -678,27 +687,28 @@ def run_fleet(cost, batch: RequestBatch, *, n_instances: int = 1,
                 # page crossings of the carried-over batch at this step
                 # (before admission registers its first-step demand)
                 mapped[i] += pinc[i][kstep[i] % P]
-            rows, prefill = admit(i, T)
+            rows, prefill, ptoks = admit(i, T)
             bsz = nrun[i]
             if bsz == 0:
                 continue
             resident = mapped[i] * P if PF \
                 else sum_p[i] + bsz * kstep[i] - sum_as[i]
-            starters.append((i, bsz, resident, prefill, rows))
+            starters.append((i, bsz, resident, prefill, rows, ptoks))
         if len(starters) > 1 and grid_like:
             times = cost.step_time(
                 np.array([s[1] for s in starters]),
                 np.array([s[2] for s in starters])).tolist()
         else:
             times = [step_scalar(s[1], s[2]) for s in starters]
-        for (i, bsz, _, prefill, rows), st in zip(starters, times):
+        for (i, bsz, _, prefill, rows, ptoks), st in zip(starters, times):
             dt = st + prefill
             if not (dt > 0 and math.isfinite(dt)):
                 raise ValueError(f"non-positive/non-finite step time {dt!r}")
             t_end = T + dt
-            logs[i].append((T, t_end, bsz, kvres[i] * P if PF else kvres[i],
-                            len(wait_q[i]) - wait_h[i], len(rows),
-                            float(mapped[i]) if PF else 0.0))
+            lrow = (T, t_end, bsz, kvres[i] * P if PF else kvres[i],
+                    len(wait_q[i]) - wait_h[i], len(rows),
+                    float(mapped[i]) if PF else 0.0)
+            logs[i].append(lrow + (ptoks,) if OBS else lrow)
             if rows:
                 # the iteration that prefills a request emits its first token
                 if len(rows) <= _VEC_CUTOVER:
@@ -724,13 +734,15 @@ def run_fleet(cost, batch: RequestBatch, *, n_instances: int = 1,
         step_logs=[StepLog.from_rows(logs[i]) for i in order],
         n_instances_final=len(active),
         scale_events=scale_events,
+        n_instances_initial=n_instances,
     )
 
 
 def _run_fleet_rich(cost, batch: RequestBatch, *, n_instances: int,
                     router: str, mb: int, cap: float,
                     paged: PagedKvSpec | None, sched: SchedPolicy,
-                    autoscaler, interval: float):
+                    autoscaler, interval: float,
+                    obs: ObsConfig | None = None):
     """The rich fleet core: eviction, chunked prefill, decode-priority.
 
     Same event skeleton as the fast path (arrivals as sorted array +
@@ -744,6 +756,7 @@ def _run_fleet_rich(cost, batch: RequestBatch, *, n_instances: int,
     from repro.serve.fleet import FleetResult, ScaleEvent
 
     round_robin = router == "round_robin"
+    OBS = _obs_on(obs)
     b = batch.fresh()
     n = len(b)
     t_admitted, t_first, t_done = b.t_admitted, b.t_first_token, b.t_done
@@ -899,11 +912,13 @@ def _run_fleet_rich(cost, batch: RequestBatch, *, n_instances: int,
             return None
         prefill = 0.0
         resident = 0
+        ptoks = 0
         for idx, r in enumerate(rl):
             c = ch[idx]
             if not PF:
                 resident += con[r] + c + resem[r]
             if c:
+                ptoks += c
                 prefill += c * per_tok if per_tok is not None \
                     else prefill_scalar(c)
         if PF:
@@ -912,9 +927,9 @@ def _run_fleet_rich(cost, batch: RequestBatch, *, n_instances: int,
         if not (dt > 0 and math.isfinite(dt)):
             raise ValueError(f"non-positive/non-finite step time {dt!r}")
         t_end = now + dt
-        logs[i].append((now, t_end, len(rl),
-                        float(ci * P) if PF else ci,
-                        len(wq), nadm, float(D) if PF else 0.0))
+        lrow = (now, t_end, len(rl), float(ci * P) if PF else ci,
+                len(wq), nadm, float(D) if PF else 0.0)
+        logs[i].append(lrow + (ptoks,) if OBS else lrow)
         planc[i] = ch
         plane[i] = ef
         return t_end
@@ -1092,4 +1107,5 @@ def _run_fleet_rich(cost, batch: RequestBatch, *, n_instances: int,
         step_logs=[StepLog.from_rows(logs[i]) for i in order],
         n_instances_final=len(active),
         scale_events=scale_events,
+        n_instances_initial=n_instances,
     )

@@ -342,13 +342,47 @@ class RequestBatch:
 
 # -- instance mechanics --------------------------------------------------------
 
+@dataclass(frozen=True)
+class ObsConfig:
+    """Observability level threaded through the serving engines.
+
+    * level 0 (default): engines record the base 7-column :class:`StepLog`.
+    * level 1: each step-log row carries one extra column,
+      ``prefill_tokens`` — the prompt-chunk tokens the iteration consumed —
+      which is what ``repro.obs.timeline`` needs to split instance lanes
+      into prefill-heavy vs pure-decode spans.
+
+    Every level produces bit-identical timing results (parity-asserted both
+    ways in tests): the column is derived from values the schedulers already
+    compute, never from extra work on the hot path.
+    """
+
+    level: int = 0
+
+    def __post_init__(self):
+        if self.level not in (0, 1):
+            raise ValueError(f"ObsConfig.level must be 0 or 1, "
+                             f"got {self.level!r}")
+
+    @property
+    def step_phases(self) -> bool:
+        """Whether step logs carry the ``prefill_tokens`` column."""
+        return self.level >= 1
+
+
+def _obs_phases(obs: ObsConfig | None) -> bool:
+    return obs is not None and obs.step_phases
+
+
 @dataclass
 class StepLog:
     """Per-iteration schedule record (numpy views over the run).
 
     ``kv_reserved`` is the committed KV footprint in token units (paged:
     committed pages x page_size); ``pages`` is the mapped-page demand of
-    the iteration (0 under full reservation, which maps nothing)."""
+    the iteration (0 under full reservation, which maps nothing).
+    ``prefill_tokens`` (prompt-chunk tokens consumed by the iteration) is
+    only recorded at ``ObsConfig(level=1)`` and is ``None`` otherwise."""
 
     t_start: np.ndarray
     t_end: np.ndarray
@@ -357,6 +391,7 @@ class StepLog:
     queued: np.ndarray       # waiting-queue depth after admission
     admitted: np.ndarray
     pages: np.ndarray        # mapped KV pages during the iteration
+    prefill_tokens: np.ndarray | None = None   # ObsConfig(level>=1) only
 
     @classmethod
     def from_rows(cls, rows: list[tuple]) -> "StepLog":
@@ -369,7 +404,9 @@ class StepLog:
         return cls(t_start=cols[0], t_end=cols[1],
                    batch=cols[2].astype(int), kv_reserved=cols[3],
                    queued=cols[4].astype(int), admitted=cols[5].astype(int),
-                   pages=cols[6].astype(int))
+                   pages=cols[6].astype(int),
+                   prefill_tokens=(cols[7].astype(int) if len(cols) > 7
+                                   else None))
 
 
 class Instance:
@@ -394,7 +431,8 @@ class Instance:
     def __init__(self, cost, max_batch: int | None = None,
                  kv_capacity_tokens: float = float("inf"),
                  paged: PagedKvSpec | None = None,
-                 sched: SchedPolicy | None = None):
+                 sched: SchedPolicy | None = None,
+                 obs: ObsConfig | None = None):
         self.cost = cost
         self.max_batch = int(max_batch if max_batch is not None
                              else cost.max_batch)
@@ -404,6 +442,7 @@ class Instance:
         self.paged = paged
         self.sched = sched if sched is not None else SchedPolicy()
         self.alloc = make_allocator(self.kv_capacity_tokens, paged)
+        self._obs_phases = _obs_phases(obs)
         self.waiting: deque[Request] = deque()
         self.running: list[Request] = []
         self.busy = False
@@ -507,12 +546,14 @@ class Instance:
         # -- map pages + price the iteration ----------------------------------
         prefill = 0.0
         resident = 0
+        ptoks = 0
         for idx, (r, chunk, _) in enumerate(plan):
             if paged:
                 self.alloc.ensure(r.rid, demands[idx])
             else:
                 resident += r._consumed + chunk + r._res_em
             if chunk:
+                ptoks += chunk
                 prefill += self.cost.prefill_time(chunk)
         if paged:
             # priced at page granularity: mapped pages x page_size tokens
@@ -521,9 +562,9 @@ class Instance:
         if not (dt > 0 and math.isfinite(dt)):
             raise ValueError(f"non-positive/non-finite step time {dt!r}")
         t_end = now + dt
-        self._log_rows.append((now, t_end, len(self.running),
-                               self.alloc.committed_tokens,
-                               len(self.waiting), admitted, float(demand)))
+        row = (now, t_end, len(self.running), self.alloc.committed_tokens,
+               len(self.waiting), admitted, float(demand))
+        self._log_rows.append(row + (ptoks,) if self._obs_phases else row)
         self._plan = plan
         self.busy = True
         return t_end
@@ -602,9 +643,15 @@ class SimMetrics:
     output_tokens: np.ndarray
     t_first_arrival: float
     t_last_done: float
+    evictions: np.ndarray = None   # per-request paged-KV recompute count
+
+    def __post_init__(self):
+        if self.evictions is None:
+            self.evictions = np.zeros(len(self.ttft), dtype=np.int64)
 
     @classmethod
-    def from_arrays(cls, t_arr, t_first, t_done, out) -> "SimMetrics":
+    def from_arrays(cls, t_arr, t_first, t_done, out,
+                    evictions=None) -> "SimMetrics":
         """Metrics straight from timing columns (a :class:`RequestBatch`) —
         no per-request objects in the loop."""
         if len(t_arr) == 0:
@@ -624,6 +671,8 @@ class SimMetrics:
             output_tokens=out.astype(int),
             t_first_arrival=float(t_arr.min()),
             t_last_done=float(t_done.max()),
+            evictions=(None if evictions is None
+                       else np.asarray(evictions, dtype=np.int64)),
         )
 
     @classmethod
@@ -634,16 +683,35 @@ class SimMetrics:
         arr = np.array([(r.t_arrival, r.t_first_token, r.t_done,
                          r.output_tokens) for r in requests])
         t_arr, t_first, t_done, out = arr.T
-        return cls.from_arrays(t_arr, t_first, t_done, out)
+        return cls.from_arrays(t_arr, t_first, t_done, out,
+                               evictions=[r.evictions for r in requests])
 
     @classmethod
     def from_batch(cls, batch: "RequestBatch") -> "SimMetrics":
         return cls.from_arrays(batch.t_arrival, batch.t_first_token,
-                               batch.t_done, batch.output_tokens)
+                               batch.t_done, batch.output_tokens,
+                               evictions=batch.evictions)
 
     @property
     def makespan_s(self) -> float:
         return max(self.t_last_done - self.t_first_arrival, 1e-12)
+
+    @property
+    def total_evictions(self) -> int:
+        """Paged-KV evictions (KV recomputes) across all requests."""
+        return int(self.evictions.sum())
+
+    @property
+    def eviction_rate_rps(self) -> float:
+        """Evictions per second of makespan."""
+        return self.total_evictions / self.makespan_s
+
+    @property
+    def evicted_frac(self) -> float:
+        """Fraction of requests evicted at least once."""
+        if len(self.evictions) == 0:
+            return 0.0
+        return float((self.evictions > 0).mean())
 
     @property
     def throughput_rps(self) -> float:
@@ -671,6 +739,11 @@ class SimResult:
     metrics: SimMetrics
     step_log: StepLog
 
+    def timeseries(self, window_s: float, *, slo: Slo | None = None):
+        """Windowed :class:`repro.obs.series.MetricSeries` rollup."""
+        from repro.obs.series import timeseries
+        return timeseries(self, window_s, slo=slo)
+
 
 # -- the single-instance event loop --------------------------------------------
 
@@ -691,7 +764,8 @@ def simulate(requests: Iterable[Request], cost, *,
              max_batch: int | None = None,
              kv_capacity_tokens: float = float("inf"),
              paged: PagedKvSpec | None = None,
-             sched: SchedPolicy | None = None) -> SimResult:
+             sched: SchedPolicy | None = None,
+             obs: ObsConfig | None = None) -> SimResult:
     """Run one instance over an open-loop arrival stream to completion.
 
     A heap-ordered discrete-event loop: arrival events enqueue into the
@@ -705,7 +779,7 @@ def simulate(requests: Iterable[Request], cost, *,
     reqs = fresh_requests(requests)
     inst = Instance(cost, max_batch=max_batch,
                     kv_capacity_tokens=kv_capacity_tokens,
-                    paged=paged, sched=sched)
+                    paged=paged, sched=sched, obs=obs)
     events: list[tuple[float, int, int]] = []  # (time, seq, kind)
     seq = 0
     for r in reqs:

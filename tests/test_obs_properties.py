@@ -1,0 +1,69 @@
+"""Hypothesis property tests for the observability derivations: for ANY
+window width, the windowed rollup must re-partition the aggregate metrics
+without losing a request, a token, or a second of busy time — and the
+Chrome trace export must stay schema-valid over randomized fleet shapes.
+
+Fixed-seed deterministic variants live in tests/test_obs.py.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.obs.timeline import chrome_trace, validate_chrome_trace
+from repro.serve.fleet import FleetSim
+from repro.serve.sim import ArrivalSpec, LengthDist, ObsConfig, Slo
+
+from test_fleet_batch import ramp_grid
+
+
+def _run(n_instances, n_requests, rate, seed):
+    spec = ArrivalSpec("obs-prop", rate, n_requests,
+                       prompt=LengthDist("uniform", low=1, high=40),
+                       output=LengthDist("uniform", low=1, high=12))
+    return FleetSim(ramp_grid(), n_instances, max_batch=4,
+                    kv_capacity_tokens=2048.0,
+                    obs=ObsConfig(level=1)).run(spec, seed=seed)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n_instances=st.integers(min_value=1, max_value=4),
+       n_requests=st.integers(min_value=1, max_value=150),
+       rate=st.floats(min_value=50.0, max_value=1200.0),
+       seed=st.integers(min_value=0, max_value=2**31 - 1),
+       # spans windows-much-wider-than-run down to thousands of windows
+       window_s=st.floats(min_value=1e-4, max_value=60.0))
+def test_timeseries_repartitions_aggregates(n_instances, n_requests, rate,
+                                            seed, window_s):
+    res = _run(n_instances, n_requests, rate, seed)
+    slo = Slo(ttft_s=0.02, percentile=95)
+    s = res.timeseries(window_s, slo=slo)
+    m = res.metrics
+    assert int(s.arrived.sum()) == n_requests
+    assert int(s.completed.sum()) == n_requests
+    assert int(s.tokens.sum()) == int(res.batch.output_tokens.sum())
+    assert int(s.ok.sum()) == int(slo.ok_mask(m).sum())
+    total_busy = sum(float((sl.t_end - sl.t_start).sum())
+                     for sl in res.step_logs)
+    assert np.isclose(s.busy_s.sum(), total_busy, rtol=1e-9, atol=1e-12)
+    # weighted integrals never exceed their bounds
+    assert np.all(s.busy_s <= s.capacity_s * (1 + 1e-9) + 1e-12)
+    assert np.all((s.batch_mean >= 0) & (s.queue_mean >= 0))
+
+
+@settings(max_examples=15, deadline=None)
+@given(n_instances=st.integers(min_value=1, max_value=4),
+       n_requests=st.integers(min_value=1, max_value=120),
+       rate=st.floats(min_value=50.0, max_value=1200.0),
+       seed=st.integers(min_value=0, max_value=2**31 - 1),
+       max_requests=st.one_of(st.none(),
+                              st.integers(min_value=1, max_value=50)))
+def test_chrome_trace_always_schema_valid(n_instances, n_requests, rate,
+                                          seed, max_requests):
+    res = _run(n_instances, n_requests, rate, seed)
+    doc = chrome_trace(res, max_requests=max_requests)
+    assert validate_chrome_trace(doc) == []
+    kept = doc["otherData"]["n_requests"]
+    assert kept == min(n_requests, max_requests or n_requests)
+    assert doc["otherData"]["dropped_requests"] == n_requests - kept
