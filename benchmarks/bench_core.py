@@ -43,6 +43,7 @@ from repro.core.sweep import (
     serve_cost_grids,
     suite_analysis_for,
 )
+from repro.core.sweep import _ANALYSES as _ANALYSIS_CACHE
 from repro.core.sweep import _SUITES as _SUITE_CACHE
 from repro.core.hw import MB
 from repro.workloads import mlperf, registry
@@ -237,8 +238,7 @@ def bench_core_suite(csv: Csv):
     uniq = list({id(t): t for t in traces}.values())
 
     def build_cold():
-        _STREAMS.clear()
-        _SUITE_CACHE.clear()
+        _clear_suite_caches(uniq)
         return suite_analysis_for(uniq)
 
     _, us_build = timed(build_cold)
@@ -253,6 +253,72 @@ def bench_core_suite(csv: Csv):
     csv.add("core.suite.registry", us_reg,
             f"{len(grid_r.rows)} rows: all {len(registry.scenarios())} "
             f"registry scenarios x Table V in one pass")
+
+
+def _clear_suite_caches(traces) -> None:
+    """Drop every layer the suite build path can warm — streams (and their
+    scan layouts), per-trace analyses, suite memos, and the traces' touch
+    tables — so a 'cold' timing really pays the flatten."""
+    _STREAMS.clear()
+    _SUITE_CACHE.clear()
+    _ANALYSIS_CACHE.clear()
+    for t in traces:
+        t.__dict__.pop("_touch_table", None)
+
+
+def bench_core_suite_incremental(csv: Csv):
+    """PR-10 incremental builds, with the CI speed floors asserted
+    in-function (a violated floor raises, which turns the row into an
+    ``.ERROR`` row and fails the harness run):
+
+    * ``core.suite.warm_registry`` — a `suite_analysis_for` MISS over the
+      already-analyzed full registry (the memo cleared, streams/layouts
+      warm): padded-row assembly only, floor <= 15ms;
+    * ``core.suite.incremental`` — `suite_append` of ONE new scenario onto
+      a warm full-registry suite vs the cold rebuild of the grown
+      membership, floor >= 5x faster.
+    """
+    from repro.core.sweep import SuiteAnalysis, suite_append
+
+    traces = [scenario(n) for n in registry.scenarios()]
+    caps = [60 * MB, 1020 * MB, float(1 << 50)]
+    warm = suite_analysis_for(traces)
+    warm.prefetch(caps)
+
+    def warm_rebuild():
+        _SUITE_CACHE.clear()
+        return suite_analysis_for(traces)
+
+    _, us_warm = timed_min(warm_rebuild)
+    csv.add("core.suite.warm_registry", us_warm,
+            f"{len(traces)}-trace memo miss, streams/layouts warm "
+            f"(CI floor <= 15ms)")
+    assert us_warm <= 15_000, \
+        f"warm full-registry rebuild {us_warm:.0f}us > 15ms floor"
+
+    base_traces, newcomer = traces[:-1], traces[-1]
+    us_app = float("inf")
+    for _ in range(3):
+        _SUITE_CACHE.clear()
+        base = suite_analysis_for(base_traces)
+        base.prefetch(caps)
+        _, us = timed(lambda: suite_append(base, [newcomer]))
+        us_app = min(us_app, us)
+
+    def rebuild_cold():
+        _clear_suite_caches(traces)
+        suite = SuiteAnalysis(traces)
+        suite.prefetch(caps)
+        return suite
+
+    _, us_cold = timed_min(rebuild_cold)
+    ratio = us_cold / max(us_app, 1e-9)
+    csv.add("core.suite.incremental", us_app,
+            f"append 1 of {len(traces)} scenarios + capacity union vs "
+            f"{us_cold:.0f}us cold rebuild: {ratio:.1f}x "
+            f"(CI floor >= 5x)")
+    assert ratio >= 5.0, \
+        f"single-scenario append only {ratio:.1f}x faster than cold rebuild"
 
 
 def bench_check(csv: Csv):
@@ -280,4 +346,5 @@ def bench_check(csv: Csv):
             f"{len(grid.rows)} rows: kernel.* catalog x Table V")
 
 
-ALL = [bench_core, bench_timemodel, bench_core_suite, bench_check]
+ALL = [bench_core, bench_timemodel, bench_core_suite,
+       bench_core_suite_incremental, bench_check]

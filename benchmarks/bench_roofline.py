@@ -62,29 +62,32 @@ def bench_roofline(csv: Csv):
 
 def bench_arch_copa(csv: Csv):
     """The paper's analysis applied to the assigned architectures — one
-    engine grid over the lm registry scenarios."""
+    engine grid over the lm registry scenarios to warm the shared caches,
+    then each scenario's repricing timed on its own. (These rows used to
+    split ONE wall time evenly across all scenarios, so every row recorded
+    the identical number; now each row is its own measurement.)"""
     from repro.core import copa
     from repro.core.sweep import SweepEngine
 
-    def run():
-        names = [f"lm.{arch}.{shape}" for arch in configs.ARCHS
-                 for shape in ("train_4k", "decode_32k")]
-        grid = SweepEngine(
-            names, configs=[copa.GPU_N_BASE],
-            extra_llc_capacities=[60 * MB, 960 * MB],
-        ).run()
-        rows = []
-        for t in grid.traces:
-            r = grid.result(t, "GPU-N")
-            sweep = grid.llc_traffic[t]
-            red = sweep[float(60 * MB)] / max(sweep[float(960 * MB)], 1e-9)
-            rows.append((t, r.time_s, r.bottleneck, min(red, 1e3)))
-        return rows
+    names = [f"lm.{arch}.{shape}" for arch in configs.ARCHS
+             for shape in ("train_4k", "decode_32k")]
+    kw = dict(configs=[copa.GPU_N_BASE],
+              extra_llc_capacities=[60 * MB, 960 * MB])
 
-    rows, us = timed(run)
-    for name, t, bn, red in rows:
-        csv.add(f"arch_copa.{name}", us / len(rows),
-                f"T={t*1e3:.2f}ms bottleneck={bn} l3_960MB_traffic_reduction={red:.1f}x")
+    def run_one(name: str):
+        grid = SweepEngine([name], **kw).run()
+        t = grid.traces[0]
+        r = grid.result(t, "GPU-N")
+        sweep = grid.llc_traffic[t]
+        red = sweep[float(60 * MB)] / max(sweep[float(960 * MB)], 1e-9)
+        return t, r.time_s, r.bottleneck, min(red, 1e3)
+
+    SweepEngine(names, **kw).run()  # warm streams/analyses/suite caches
+    for name in names:
+        (t, tsec, bn, red), us = timed(lambda n=name: run_one(n))
+        csv.add(f"arch_copa.{t}", us,
+                f"T={tsec*1e3:.2f}ms bottleneck={bn} "
+                f"l3_960MB_traffic_reduction={red:.1f}x")
 
 
 def bench_kernels(csv: Csv):

@@ -32,7 +32,10 @@ def compare_rows(old: dict, new: dict,
                          "ratio": None,
                          "status": "added" if o is None else "removed"})
             continue
-        ratio = n / o if o > 0 else float("inf")
+        # 0.0-valued rows are derived-only markers (speedup/ratio rows whose
+        # payload lives in the derived column): identical zeros are a match,
+        # not a div-by-zero regression.
+        ratio = n / o if o > 0 else (1.0 if n == 0 else float("inf"))
         if ratio > threshold:
             status = "REGRESSED"
         elif ratio < 1.0 / threshold:

@@ -24,8 +24,14 @@ def main() -> None:
                     help="also write {name: us_per_call} JSON to OUT")
     ap.add_argument("--compare", default=None, metavar="BASELINE",
                     help="diff this run against a saved BENCH_*.json "
-                         "snapshot (informational; see benchmarks.compare "
-                         "for the gating CLI)")
+                         "snapshot (informational unless "
+                         "--fail-on-regression)")
+    ap.add_argument("--threshold", type=float, default=1.25,
+                    help="with --compare: new/old ratio above which a row "
+                         "is REGRESSED (default 1.25)")
+    ap.add_argument("--fail-on-regression", action="store_true",
+                    help="with --compare: exit 1 when any row regressed "
+                         "past the threshold")
     args = ap.parse_args()
     only = args.only.split(",") if args.only else None
 
@@ -48,14 +54,23 @@ def main() -> None:
         with open(args.json, "w") as f:
             json.dump(csv.as_json_dict(), f, indent=2, sort_keys=True)
             f.write("\n")
+    regressed = []
     if args.compare:
         from benchmarks.compare import compare_rows, format_table
 
         with open(args.compare) as f:
             baseline = json.load(f)
-        print(format_table(compare_rows(baseline, csv.as_json_dict())))
+        rows = compare_rows(baseline, csv.as_json_dict(),
+                            threshold=args.threshold)
+        print(format_table(rows))
+        regressed = [r["name"] for r in rows if r["status"] == "REGRESSED"]
     if csv.errors:
         print(f"{len(csv.errors)} benchmark(s) errored: {', '.join(csv.errors)}",
+              file=sys.stderr)
+        sys.exit(1)
+    if regressed and args.fail_on_regression:
+        print(f"{len(regressed)} row(s) regressed past "
+              f"{args.threshold:.2f}x: {', '.join(regressed)}",
               file=sys.stderr)
         sys.exit(1)
 

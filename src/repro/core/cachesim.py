@@ -55,6 +55,97 @@ class TouchStream:
     tensor_idx: np.ndarray  # int64 dense tensor ids
     n_tensors: int
     second_half: int       # index where the steady-state copy begins
+    # lazily-built tensor-sorted scan layout (see _stream_layout); cached on
+    # the stream so re-padding a suite never recomputes the sort/segment pass
+    _layout: "_StreamLayout | None" = field(default=None, repr=False,
+                                            compare=False)
+
+    @property
+    def nbytes(self) -> int:
+        """Approximate pinned bytes (stream cache accounting)."""
+        total = (self.op_idx.nbytes + self.sizes.nbytes + self.is_write.nbytes
+                 + self.dist.nbytes + self.tensor_idx.nbytes)
+        if self._layout is not None:
+            total += self._layout.nbytes
+        return total
+
+
+@dataclass
+class _StreamLayout:
+    """One stream's touches in tensor-sorted order with every
+    capacity-independent quantity of the :func:`traffic_below` scan
+    precomputed per stream: the sorted columns, the segment structure
+    (first read after the last write, has-a-write-base) reduced to the
+    recorded touches, and the local scatter indices. Computed once per
+    stream (cached on the :class:`TouchStream`), so building or appending
+    to a :class:`StreamBatch` is pure row assembly — no per-pad argsort or
+    segment scans."""
+
+    n: int                          # touch count (= row width before pads)
+    sizes: np.ndarray               # (n,) float64, tensor-sorted
+    dist: np.ndarray                # (n,) float64
+    is_write: np.ndarray            # (n,) bool
+    is_inf: np.ndarray              # (n,) bool: +inf distance
+    rec_cols: np.ndarray            # (n_rec,) sorted-position column
+    seg_rec: np.ndarray             # (n_rec,) first read after the last write
+    has_base_rec: np.ndarray        # (n_rec,) last write inside own chain
+    iw_rec: np.ndarray              # (n_rec,) is-write flag
+    sizes_rec: np.ndarray           # (n_rec,) touch bytes
+    op_rec: np.ndarray              # (n_rec,) LOCAL op id (pre-offset)
+
+    @property
+    def nbytes(self) -> int:
+        return sum(a.nbytes for a in (
+            self.sizes, self.dist, self.is_write, self.is_inf, self.rec_cols,
+            self.seg_rec, self.has_base_rec, self.iw_rec, self.sizes_rec,
+            self.op_rec))
+
+
+def _stream_layout(stream: TouchStream) -> _StreamLayout:
+    """The per-stream half of the old block build: sort by tensor id
+    (stable, preserving time order inside each chain), derive the segment
+    structure, and keep only the recorded-touch reductions. Identical math
+    to the former in-block 2-D pass, evaluated per row — the values feeding
+    :meth:`StreamBatch._block_traffic` are bit-identical either way."""
+    lay = stream._layout
+    if lay is not None:
+        return lay
+    n = len(stream.op_idx)
+    order = np.argsort(stream.tensor_idx, kind="stable")
+    sizes = stream.sizes[order]
+    dist = stream.dist[order]
+    is_write = stream.is_write[order]
+    tid = stream.tensor_idx[order]
+    pos = np.arange(n, dtype=np.int64)
+    is_new = np.concatenate([[True], tid[1:] != tid[:-1]]) if n \
+        else np.zeros(0, dtype=bool)
+    chain_start = np.maximum.accumulate(np.where(is_new, pos, 0))
+    last_write_incl = np.maximum.accumulate(np.where(is_write, pos, -1))
+    last_write = np.concatenate([[-1], last_write_incl[:-1]]) if n \
+        else np.zeros(0, dtype=np.int64)
+    rec = np.nonzero(order >= stream.second_half)[0]
+    lay = _StreamLayout(
+        n=n,
+        sizes=sizes,
+        dist=dist,
+        is_write=is_write,
+        is_inf=np.isinf(dist),
+        rec_cols=rec,
+        seg_rec=(last_write + 1)[rec],
+        has_base_rec=(last_write >= chain_start)[rec],
+        iw_rec=is_write[rec],
+        sizes_rec=sizes[rec],
+        op_rec=stream.op_idx[order][rec].astype(np.int64),
+    )
+    stream._layout = lay
+    return lay
+
+
+#: Buffers are recycled REUSE_DELAY touches after death: asynchronous
+#: execution keeps freed buffers pinned briefly, so reuse is near- but not
+#: perfectly-immediate (calibrated against Fig 4's inference saturation
+#: capacities).
+REUSE_DELAY = 24
 
 
 def _assign_buffers(trace: Trace) -> dict[str, str]:
@@ -85,11 +176,6 @@ def _assign_buffers(trace: Trace) -> dict[str, str]:
         return first_is_write[t] and not t.startswith("in.")
 
     # Free events sorted by position; greedy best-fit (smallest buffer >= size).
-    # Buffers are recycled REUSE_DELAY touches after death: asynchronous
-    # execution keeps freed buffers pinned briefly, so reuse is near- but not
-    # perfectly-immediate (calibrated against Fig 4's inference saturation
-    # capacities).
-    REUSE_DELAY = 24
     mapping: dict[str, str] = {}
     free: list[tuple[int, str]] = []  # (buffer_size, buffer_name)
     deaths = sorted((last[t] + REUSE_DELAY, t) for t in first if transient(t))
@@ -115,12 +201,10 @@ def _assign_buffers(trace: Trace) -> dict[str, str]:
     return mapping
 
 
-def _flatten_trace(trace: Trace, cyclic: bool, reuse_buffers: bool):
-    """The capacity- and distance-independent part of :func:`build_stream`:
-    flatten, buffer-recycle, double, and densify one trace's touches.
-    Returns ``(op_idx, dense_tensor_ids, sizes, is_write, n_tensors,
-    second_half)`` — everything a :class:`TouchStream` needs except the
-    reuse distances."""
+def _reference_flatten(trace: Trace, cyclic: bool, reuse_buffers: bool):
+    """Per-touch oracle for :func:`_flatten_trace` (the original dict-based
+    interning loop). Retained for parity tests and as the fallback for
+    pathological tensor names that could alias a recycled-buffer name."""
     mapping = _assign_buffers(trace) if reuse_buffers else {}
     op_idx, tids, sizes, is_write = [], [], [], []
     intern: dict[str, int] = {}
@@ -157,13 +241,173 @@ def _flatten_trace(trace: Trace, cyclic: bool, reuse_buffers: bool):
     return op_idx, dense, sizes, is_write, n_tensors, (n if cyclic else 0)
 
 
+def _assign_buffer_ids(table) -> tuple[np.ndarray, int]:
+    """Array-based twin of :func:`_assign_buffers`: the same greedy best-fit
+    recycling, but iterating only over transient-tensor *births* (a handful
+    per trace) instead of every touch. Free events accumulated between two
+    births are drained at the later birth — the free list any allocation
+    sees is identical, so the resulting tensor->buffer partition is
+    bit-identical to the per-touch oracle (asserted in tests).
+
+    Returns ``(map_id, n_fresh)``: ``map_id[k]`` is name id ``k``'s mapped
+    id (itself for persistent/streaming tensors, ``K + j`` for the ``j``-th
+    fresh buffer); ties in the free list and death order are broken on the
+    exact buffer/tensor name strings the oracle uses."""
+    import bisect
+
+    K = table.n_names
+    map_id = np.arange(K, dtype=np.int64)
+    transient = table.first_is_write & ~table.stream_flag
+    t_ids = np.nonzero(transient)[0]
+    if not len(t_ids):
+        return map_id, 0
+    names = table.names
+    births = t_ids[np.argsort(table.first[t_ids])]
+    deaths = sorted((int(table.last[t]) + REUSE_DELAY, names[t], int(t))
+                    for t in t_ids)
+    free: list[tuple[float, str, int]] = []  # (size, buf_name, buf_id)
+    allocated: dict[int, tuple[str, int]] = {}  # name id -> (buf_name, id)
+    di = 0
+    n_fresh = 0
+    for t in births:
+        birth = int(table.first[t])
+        while di < len(deaths) and deaths[di][0] < birth:
+            dead = deaths[di][2]
+            if dead in allocated:
+                bname, bid = allocated[dead]
+                bisect.insort(free, (float(table.max_size[dead]), bname, bid))
+            di += 1
+        i = bisect.bisect_left(free, (float(table.max_size[t]), ""))
+        if i < len(free):
+            _, bname, bid = free.pop(i)
+        else:
+            # the oracle's fresh-name counter is "transients allocated so
+            # far" (reusers included), so names match it exactly
+            bname = f"__buf{len(allocated)}.{names[int(t)]}"
+            bid = K + n_fresh
+            n_fresh += 1
+        allocated[int(t)] = (bname, bid)
+        map_id[t] = bid
+    return map_id, n_fresh
+
+
+def _flatten_trace(trace: Trace, cyclic: bool, reuse_buffers: bool):
+    """The capacity- and distance-independent part of :func:`build_stream`:
+    flatten, buffer-recycle, double, and densify one trace's touches.
+    Returns ``(op_idx, dense_tensor_ids, sizes, is_write, n_tensors,
+    second_half)`` — everything a :class:`TouchStream` needs except the
+    reuse distances.
+
+    Array-based: raw touch columns come from the cached
+    :meth:`~repro.core.trace.Trace.touch_table`, recycling from
+    :func:`_assign_buffer_ids`, and the dense ids in closed form — a
+    non-streaming tensor's dense id is its first-appearance rank among
+    non-streaming (mapped) names, the ``j``-th streaming touch gets
+    ``K + j`` (second copy ``K + S + j``): exactly the order
+    ``np.unique`` gave the oracle's sentinel ids. Bit-identical to
+    :func:`_reference_flatten` (asserted in tests)."""
+    table = trace.touch_table()
+    n = table.n_touches
+    if n == 0:
+        z = np.zeros(0, dtype=np.int64)
+        return (np.zeros(0, dtype=np.int32), z, np.zeros(0),
+                np.zeros(0, dtype=bool), 0, 0)
+    if reuse_buffers:
+        if table.has_buf_names:
+            # a real tensor could alias a recycled-buffer name; take the
+            # string-keyed oracle for this (pathological) trace
+            return _reference_flatten(trace, cyclic, reuse_buffers)
+        map_id, n_fresh = _assign_buffer_ids(table)
+    else:
+        map_id, n_fresh = np.arange(table.n_names, dtype=np.int64), 0
+    mids = map_id[table.name_id]
+    stream_ext = np.concatenate(
+        [table.stream_flag, np.zeros(n_fresh, dtype=bool)])
+    st = stream_ext[mids]
+    S = int(np.count_nonzero(st))
+    dense = np.empty(n, dtype=np.int64)
+    ns = mids[~st]
+    if len(ns):
+        uniq, first_idx, inv = np.unique(ns, return_index=True,
+                                         return_inverse=True)
+        rank = np.empty(len(uniq), dtype=np.int64)
+        rank[np.argsort(first_idx)] = np.arange(len(uniq), dtype=np.int64)
+        dense[~st] = rank[inv]
+        k_ns = len(uniq)
+    else:
+        k_ns = 0
+    dense[st] = k_ns + np.arange(S, dtype=np.int64)
+    op_idx, sizes, is_write = table.op_idx, table.sizes, table.is_write
+    if cyclic:
+        op_idx = np.concatenate([op_idx, op_idx])
+        # streaming tensors must NOT alias across the two copies
+        dense = np.concatenate([dense, np.where(st, dense + S, dense)])
+        sizes = np.concatenate([sizes, sizes])
+        is_write = np.concatenate([is_write, is_write])
+        n_tensors = k_ns + 2 * S
+    else:
+        n_tensors = k_ns + S
+    return op_idx, dense, sizes, is_write, n_tensors, (n if cyclic else 0)
+
+
 # Process-wide stream cache: streams are pure functions of the trace (keyed
 # by identity + op count like sweep._ANALYSES), and flattening them is
 # Python-loop bound, so repeated sweeps over registry traces should never
-# re-pay it. Bounded LRU; only default-kernel streams are cached (reference
-# dist_fn calls from parity tests/benchmarks always rebuild).
-_STREAMS: OrderedDict[tuple[int, int, bool, bool], tuple[Trace, TouchStream]] = OrderedDict()
+# re-pay it. Bounded LRU — by entry count AND by a byte budget, so a long
+# session sweeping many large ad-hoc traces cannot grow it without limit —
+# with hit/miss/eviction counters (``stream_cache_stats``) so incremental
+# build behavior is observable. Only default-kernel streams are cached
+# (reference dist_fn calls from parity tests/benchmarks always rebuild).
+# Value tuples carry the stream's byte estimate at insertion time (the scan
+# layout attaches lazily afterwards, so the real footprint can be somewhat
+# larger); a raw ``_STREAMS.clear()`` stays valid — bytes are summed from
+# the stored entries, never kept as a separate running total.
+_STREAMS: OrderedDict[
+    tuple[int, int, bool, bool], tuple[Trace, TouchStream, int]
+] = OrderedDict()
 _STREAMS_MAX = 512
+_STREAMS_MAX_BYTES = 256 * 1024 * 1024
+_STREAM_COUNTERS = {"hits": 0, "misses": 0, "evictions": 0}
+
+
+def stream_cache_stats() -> dict[str, int]:
+    """Observable stream-cache state: hit/miss/eviction counters plus the
+    current entry count, resident byte estimate, and configured bounds."""
+    return {
+        **_STREAM_COUNTERS,
+        "entries": len(_STREAMS),
+        "bytes": sum(nb for _, _, nb in _STREAMS.values()),
+        "max_entries": _STREAMS_MAX,
+        "max_bytes": _STREAMS_MAX_BYTES,
+    }
+
+
+def stream_cache_clear() -> None:
+    """Drop every cached stream and zero the counters."""
+    _STREAMS.clear()
+    for k in _STREAM_COUNTERS:
+        _STREAM_COUNTERS[k] = 0
+
+
+def set_stream_cache_limit(max_entries: int | None = None,
+                           max_bytes: int | None = None) -> None:
+    """Re-bound the stream LRU (``None`` keeps a bound unchanged). Shrinking
+    a bound evicts immediately from the LRU end."""
+    global _STREAMS_MAX, _STREAMS_MAX_BYTES
+    if max_entries is not None:
+        _STREAMS_MAX = int(max_entries)
+    if max_bytes is not None:
+        _STREAMS_MAX_BYTES = int(max_bytes)
+    _stream_cache_trim()
+
+
+def _stream_cache_trim() -> None:
+    total = sum(nb for _, _, nb in _STREAMS.values())
+    while _STREAMS and (len(_STREAMS) > _STREAMS_MAX
+                        or total > _STREAMS_MAX_BYTES):
+        _, (_, _, nb) = _STREAMS.popitem(last=False)
+        total -= nb
+        _STREAM_COUNTERS["evictions"] += 1
 
 
 def _stream_cache_get(trace: Trace, cyclic: bool, reuse_buffers: bool) -> TouchStream | None:
@@ -171,15 +415,17 @@ def _stream_cache_get(trace: Trace, cyclic: bool, reuse_buffers: bool) -> TouchS
     hit = _STREAMS.get(key)
     if hit is not None and hit[0] is trace:
         _STREAMS.move_to_end(key)
+        _STREAM_COUNTERS["hits"] += 1
         return hit[1]
+    _STREAM_COUNTERS["misses"] += 1
     return None
 
 
 def _stream_cache_put(trace: Trace, cyclic: bool, reuse_buffers: bool,
                       stream: TouchStream) -> None:
-    _STREAMS[(id(trace), len(trace.ops), cyclic, reuse_buffers)] = (trace, stream)
-    if len(_STREAMS) > _STREAMS_MAX:
-        _STREAMS.popitem(last=False)
+    key = (id(trace), len(trace.ops), cyclic, reuse_buffers)
+    _STREAMS[key] = (trace, stream, int(stream.nbytes))
+    _stream_cache_trim()
 
 
 def build_stream(trace: Trace, cyclic: bool = True, reuse_buffers: bool = True,
@@ -496,12 +742,37 @@ class StreamBatch:
             np.cumsum(np.array([s.n_ops for s in streams], dtype=np.int64),
                       out=op_offsets[1:])
         batch = cls(streams=streams, op_offsets=op_offsets)
+        batch._append_blocks(range(len(streams)))
+        return batch
+
+    def append(self, streams: Iterable[TouchStream]) -> list[_PaddedBlock]:
+        """Append rows to a live batch: new streams extend the global op
+        axis and are grouped into NEW blocks (same policy as :meth:`pad`
+        over the new rows alone — existing blocks are never rebuilt). Row
+        results are per-row, so the grown batch is bit-identical, stream
+        for stream, to a cold :meth:`pad` of the full list (asserted in
+        tests). Returns the blocks added, for partial (new-rows-only)
+        :meth:`traffic_matrices` scans."""
+        streams = list(streams)
+        start = len(self.streams)
+        self.streams.extend(streams)
+        if streams:
+            self.op_offsets = np.concatenate([
+                self.op_offsets,
+                self.op_offsets[-1] + np.cumsum(
+                    np.array([s.n_ops for s in streams], dtype=np.int64)),
+            ])
+        k0 = len(self._blocks)
+        self._append_blocks(range(start, len(self.streams)))
+        return self._blocks[k0:]
+
+    def _append_blocks(self, indices: Iterable[int]) -> None:
         # Group by length, longest first: a block absorbs streams down to
         # _BLOCK_FILL of its width (bounding padding waste) and splits when
         # its padded slot count would exceed _BLOCK_SLOTS (bounding the
         # temporaries of one scan).
-        by_len = sorted((i for i in range(len(streams))
-                         if len(streams[i].op_idx)),
+        streams = self.streams
+        by_len = sorted((i for i in indices if len(streams[i].op_idx)),
                         key=lambda i: -len(streams[i].op_idx))
         group: list[int] = []
         for i in by_len:
@@ -510,77 +781,67 @@ class StreamBatch:
                 width = len(streams[group[0]].op_idx)
                 if n < _BLOCK_FILL * width or \
                         (len(group) + 1) * width > _BLOCK_SLOTS:
-                    batch._blocks.append(batch._build_block(group))
+                    self._blocks.append(self._build_block(group))
                     group = []
             group.append(i)
         if group:
-            batch._blocks.append(batch._build_block(group))
-        return batch
+            self._blocks.append(self._build_block(group))
 
     def _build_block(self, members: list[int]) -> _PaddedBlock:
+        """Assemble one padded block from the members' cached
+        :class:`_StreamLayout` rows: padded 2-D columns by row copy, the
+        recorded-touch reductions by concatenation (np.nonzero on a 2-D
+        mask is row-major, so per-row concatenation reproduces the old
+        in-block ordering exactly). Pad cells keep their exact neutral
+        values: zero size, +inf distance, not-a-write."""
         streams, op_offsets = self.streams, self.op_offsets
-        width = len(streams[members[0]].op_idx)
+        lays = [_stream_layout(streams[i]) for i in members]
+        width = lays[0].n
         shape = (len(members), width)
         sizes = np.zeros(shape)
         dist = np.full(shape, np.inf)
         is_write = np.zeros(shape, dtype=bool)
-        tid = np.full(shape, PAD_ID, dtype=np.int64)
-        op_global = np.zeros(shape, dtype=np.int64)
-        record = np.zeros(shape, dtype=bool)
-        for r, i in enumerate(members):
-            s = streams[i]
-            n = len(s.op_idx)
-            # Per-row tensor-sorted layout, computed once: the scan order of
-            # traffic_below for this stream alone (pads stay at the tail).
-            order = np.argsort(s.tensor_idx, kind="stable")
-            sizes[r, :n] = s.sizes[order]
-            dist[r, :n] = s.dist[order]
-            is_write[r, :n] = s.is_write[order]
-            tid[r, :n] = s.tensor_idx[order]
-            op_global[r, :n] = s.op_idx[order].astype(np.int64) + op_offsets[i]
-            record[r, :n] = order >= s.second_half
-        R, L = shape
-        pos = np.broadcast_to(np.arange(L, dtype=np.int64)[None, :], (R, L))
-        is_new = np.concatenate(
-            [np.ones((R, 1), dtype=bool), tid[:, 1:] != tid[:, :-1]], axis=1
-        )
-        chain_start = np.maximum.accumulate(np.where(is_new, pos, 0), axis=1)
-        last_write_incl = np.maximum.accumulate(
-            np.where(is_write, pos, -1), axis=1
-        )
-        last_write = np.concatenate(
-            [np.full((R, 1), -1, dtype=np.int64), last_write_incl[:, :-1]],
-            axis=1,
-        )
-        rec = np.nonzero(record)
+        is_inf = np.ones(shape, dtype=bool)
+        for r, lay in enumerate(lays):
+            n = lay.n
+            sizes[r, :n] = lay.sizes
+            dist[r, :n] = lay.dist
+            is_write[r, :n] = lay.is_write
+            is_inf[r, :n] = lay.is_inf
+        counts = [len(lay.rec_cols) for lay in lays]
         return _PaddedBlock(
-            members=members,
+            members=list(members),
             sizes=sizes,
             dist=dist,
             is_write=is_write,
-            is_inf=np.isinf(dist),
-            rec_rows=rec[0],
-            rec_cols=rec[1],
-            seg_rec=(last_write + 1)[rec],
-            has_base_rec=(last_write >= chain_start)[rec],
-            iw_rec=is_write[rec],
-            sizes_rec=sizes[rec],
-            op_rec=op_global[rec],
+            is_inf=is_inf,
+            rec_rows=np.repeat(np.arange(len(members), dtype=np.int64),
+                               counts),
+            rec_cols=np.concatenate([lay.rec_cols for lay in lays]),
+            seg_rec=np.concatenate([lay.seg_rec for lay in lays]),
+            has_base_rec=np.concatenate([lay.has_base_rec for lay in lays]),
+            iw_rec=np.concatenate([lay.iw_rec for lay in lays]),
+            sizes_rec=np.concatenate([lay.sizes_rec for lay in lays]),
+            op_rec=np.concatenate(
+                [lay.op_rec + op_offsets[i] for lay, i in zip(lays, members)]),
         )
 
     def traffic_matrices(
-        self, capacities: Sequence[float]
+        self, capacities: Sequence[float],
+        blocks: Sequence[_PaddedBlock] | None = None,
     ) -> tuple[np.ndarray, np.ndarray]:
         """One batched scan over all rows: per-op fill/writeback bytes as two
         ``(n_capacities, n_ops_total)`` matrices over the global op axis.
-        Stream ``i``'s columns are ``op_slice(i)``."""
+        Stream ``i``'s columns are ``op_slice(i)``. ``blocks`` restricts the
+        scan to a subset of row blocks (appended rows) — other columns stay
+        zero."""
         caps = np.asarray(capacities, dtype=np.float64)
         ncap = len(caps)
         n_ops_total = self.n_ops_total
         fills = np.zeros((ncap, n_ops_total))
         wbs = np.zeros((ncap, n_ops_total))
         if ncap:
-            for block in self._blocks:
+            for block in (self._blocks if blocks is None else blocks):
                 self._block_traffic(block, caps, fills, wbs)
         return fills, wbs
 

@@ -585,23 +585,157 @@ class SuiteAnalysis:
 
     # -- traffic ---------------------------------------------------------------
     def prefetch(self, capacities: Iterable[float]) -> None:
-        """Batch-compute every capacity not yet known suite-wide: ONE padded
-        scan covers all member traces, then each member's per-trace cache is
-        filled with its row slices. Capacities some members already have
-        individually still go through the batch (one scan beats N-1
-        per-trace scans); those members keep their cached object — the
-        batch row is bit-identical to it, so suite state stays consistent
-        either way."""
+        """Make every requested capacity known suite-wide, scanning as
+        little as possible: rows whose member :class:`TraceAnalysis` already
+        carries a capacity (from an earlier suite in this session, or a
+        per-trace call) are *gathered* from that cache; only blocks holding
+        at least one uncovered row go through a batched
+        :meth:`~repro.core.cachesim.StreamBatch.traffic_matrices` scan — one
+        call for the union of all missing capacities. A cached member row is
+        bit-identical to a rescan of it (the per-row independence the batch
+        is built on), so assembled and scanned planes cannot differ."""
         want = sorted({float(c) for c in capacities})
         missing = [c for c in want if c not in self._levels_cat]
-        if missing:
-            fills, wbs = self.batch.traffic_matrices(missing)
-            for k, cap in enumerate(missing):
-                self._levels_cat[cap] = (fills[k], wbs[k])
+        if not missing:
+            return
+        scan_caps = [c for c in missing
+                     if any(c not in ta._levels for ta in self.analyses)]
+        if scan_caps:
+            need = {i for i, ta in enumerate(self.analyses)
+                    if any(c not in ta._levels for c in scan_caps)}
+            blocks = [b for b in self.batch._blocks
+                      if any(m in need for m in b.members)]
+            if len(blocks) == len(self.batch._blocks):
+                blocks = None  # full scan; skip the membership indirection
+            fills, wbs = self.batch.traffic_matrices(scan_caps, blocks=blocks)
+        for c in missing:
+            if c in scan_caps:
+                k = scan_caps.index(c)
+                fill, wb = fills[k], wbs[k]
                 for i, ta in enumerate(self.analyses):
+                    lt = ta._levels.get(c)
                     sl = self.op_slice(i)
-                    ta._levels.setdefault(
-                        cap, LevelTraffic(fills[k, sl], wbs[k, sl]))
+                    if lt is not None:
+                        # covered row: its block may not have been scanned;
+                        # the cached values are bit-identical to a scan
+                        fill[sl] = lt.fill
+                        wb[sl] = lt.writeback
+                    else:
+                        ta._levels[c] = LevelTraffic(fill[sl], wb[sl])
+            else:
+                # every member already has this capacity: pure gather
+                fill = np.concatenate(
+                    [ta._levels[c].fill for ta in self.analyses]) \
+                    if self.analyses else np.zeros(0)
+                wb = np.concatenate(
+                    [ta._levels[c].writeback for ta in self.analyses]) \
+                    if self.analyses else np.zeros(0)
+            self._levels_cat[c] = (fill, wb)
+
+    def append(self, traces: Sequence[Trace],
+               analyses: Sequence[TraceAnalysis] | None = None) -> None:
+        """Grow the suite in place: new traces join the batch as fresh
+        blocks (O(new trace) — no re-pad of existing rows) and every cached
+        plane is extended for them — the static vectors, the occupancy
+        cache, the L2 touch row, and each capacity in ``_levels_cat`` via
+        ONE partial scan over just the new blocks (the session-level
+        capacity union: whatever capacities this suite has ever seen, a new
+        scenario gets them all on arrival). The grown suite is
+        bit-identical, field for field, to a cold build over the full list
+        (asserted in tests).
+
+        NOTE: callers holding this object see it grow. Use
+        :func:`suite_append` to also keep the :func:`suite_analysis_for`
+        memo layer consistent."""
+        traces = list(traces)
+        if not traces:
+            return
+        if analyses is None:
+            streams = build_streams(traces, cyclic=self.cyclic)
+            analyses = [TraceAnalysis(t, cyclic=self.cyclic, stream=s)
+                        for t, s in zip(traces, streams)]
+        analyses = list(analyses)
+        old_total = self.batch.n_ops_total
+        old_n = self.n_traces
+        new_blocks = self.batch.append([ta.stream for ta in analyses])
+        self.traces.extend(traces)
+        self.analyses.extend(analyses)
+        self.flops = np.concatenate(
+            [self.flops] + [ta.flops for ta in analyses])
+        self.parallelism = np.concatenate(
+            [self.parallelism] + [ta.parallelism for ta in analyses])
+        self.is_tc = np.concatenate(
+            [self.is_tc] + [ta.is_tc for ta in analyses])
+        for conc, occ in list(self._occ.items()):
+            self._occ[conc] = np.concatenate([
+                occ,
+                np.minimum(1.0, self.parallelism[old_total:] / conc) ** 0.55,
+            ])
+        if self._l2_touch is not None:
+            l2 = np.zeros(self.batch.n_ops_total)
+            l2[:old_total] = self._l2_touch
+            self._l2_touch = l2
+            for i, ta in enumerate(analyses, start=old_n):
+                s = ta.stream
+                sl = self.op_slice(i)
+                if ta._l2_touch is not None:
+                    l2[sl] = ta._l2_touch
+                    continue
+                seg = l2[sl]
+                np.add.at(seg, s.op_idx[s.second_half:],
+                          s.sizes[s.second_half:])
+                ta._l2_touch = seg
+        caps_known = sorted(self._levels_cat)
+        if caps_known:
+            fills, wbs = self.batch.traffic_matrices(caps_known,
+                                                     blocks=new_blocks)
+            for k, cap in enumerate(caps_known):
+                of, ow = self._levels_cat[cap]
+                fills[k, :old_total] = of
+                wbs[k, :old_total] = ow
+                self._levels_cat[cap] = (fills[k], wbs[k])
+                for i, ta in enumerate(analyses, start=old_n):
+                    sl = self.op_slice(i)
+                    lt = ta._levels.get(cap)
+                    if lt is not None:
+                        fills[k, sl] = lt.fill
+                        wbs[k, sl] = lt.writeback
+                    else:
+                        ta._levels[cap] = LevelTraffic(fills[k, sl],
+                                                       wbs[k, sl])
+        for cap in list(self._totals):
+            self._totals[cap] = np.concatenate([
+                self._totals[cap],
+                [ta._levels[cap].total for ta in analyses],
+            ])
+
+    def invalidate(self, traces: Trace | Sequence[Trace]) -> None:
+        """Drop member traces in place (a scenario whose trace object was
+        rebuilt or grew stale). Surviving rows are re-grouped into a fresh
+        batch (cheap: per-stream layouts are cached) and every cached plane
+        is *gathered* down to the surviving columns — no rescan. Unknown
+        traces are ignored."""
+        if isinstance(traces, Trace):
+            traces = [traces]
+        drop = {id(t) for t in traces}
+        keep = [i for i, t in enumerate(self.traces) if id(t) not in drop]
+        if len(keep) == len(self.traces):
+            return
+        cols = np.concatenate(
+            [np.arange(self.op_slice(i).start, self.op_slice(i).stop)
+             for i in keep]) if keep else np.zeros(0, dtype=np.int64)
+        self.traces = [self.traces[i] for i in keep]
+        self.analyses = [self.analyses[i] for i in keep]
+        self.batch = StreamBatch.pad([ta.stream for ta in self.analyses])
+        self.flops = self.flops[cols]
+        self.parallelism = self.parallelism[cols]
+        self.is_tc = self.is_tc[cols]
+        self._occ = {c: occ[cols] for c, occ in self._occ.items()}
+        if self._l2_touch is not None:
+            self._l2_touch = self._l2_touch[cols]
+        self._levels_cat = {c: (f[cols], w[cols])
+                            for c, (f, w) in self._levels_cat.items()}
+        self._totals = {c: tot[keep] for c, tot in self._totals.items()}
 
     def totals_below(self, capacity: float) -> np.ndarray:
         """Per-trace total traffic below one capacity, shape (n_traces,)."""
@@ -726,15 +860,26 @@ _SUITES: OrderedDict[tuple, SuiteAnalysis] = OrderedDict()
 _SUITES_MAX = 32
 
 
+def _suite_key(traces: Sequence[Trace], cyclic: bool) -> tuple:
+    return (cyclic,) + tuple((id(t), len(t.ops)) for t in traces)
+
+
 def suite_analysis_for(traces: Sequence[Trace], cyclic: bool = True) -> SuiteAnalysis:
     """Process-wide :class:`SuiteAnalysis` cache (keyed by trace identities).
 
     Member analyses are shared with :func:`analysis_for`'s per-trace cache,
-    so suite passes and single-trace APIs warm each other."""
+    so suite passes and single-trace APIs warm each other — and since
+    :meth:`SuiteAnalysis.prefetch` gathers member-cached capacities instead
+    of rescanning them, a *miss* here over already-analyzed traces is a
+    warm rebuild (padded-row assembly from cached stream layouts, no
+    Mattson pass, no traffic scan), not a cold one. To grow or shrink a
+    cached suite in place, use :func:`suite_append` /
+    :func:`suite_invalidate`."""
     traces = list(traces)
-    key = (cyclic,) + tuple((id(t), len(t.ops)) for t in traces)
+    key = _suite_key(traces, cyclic)
     hit = _SUITES.get(key)
-    if hit is not None and all(a is b for a, b in zip(hit.traces, traces)):
+    if hit is not None and hit.n_traces == len(traces) \
+            and all(a is b for a, b in zip(hit.traces, traces)):
         _SUITES.move_to_end(key)
         return hit
     # Build member streams in one batched pass BEFORE analysis_for would
@@ -747,6 +892,47 @@ def suite_analysis_for(traces: Sequence[Trace], cyclic: bool = True) -> SuiteAna
     _SUITES[key] = suite
     if len(_SUITES) > _SUITES_MAX:
         _SUITES.popitem(last=False)
+    return suite
+
+
+def _rekey_suite(suite: SuiteAnalysis) -> None:
+    """Re-index ``suite`` in the process cache under its current members."""
+    for k, s in list(_SUITES.items()):
+        if s is suite:
+            del _SUITES[k]
+    _SUITES[_suite_key(suite.traces, suite.cyclic)] = suite
+    if len(_SUITES) > _SUITES_MAX:
+        _SUITES.popitem(last=False)
+
+
+def suite_append(suite: SuiteAnalysis, traces: Sequence[Trace]) -> SuiteAnalysis:
+    """Append scenarios to a live suite in O(new trace) — the incremental
+    half of :func:`suite_analysis_for`'s append/invalidate API. New traces
+    join the padded batch as fresh blocks, inherit every capacity the
+    suite has ever computed via one partial scan, and the suite is re-keyed
+    in the process cache so a later ``suite_analysis_for`` call with the
+    grown membership hits it. Traces already in the suite are skipped.
+    Returns ``suite`` (grown in place)."""
+    have = {id(t) for t in suite.traces}
+    new = [t for t in traces if id(t) not in have]
+    if new:
+        build_streams(new, cyclic=suite.cyclic)
+        suite.append(new, analyses=[analysis_for(t, cyclic=suite.cyclic)
+                                    for t in new])
+        _rekey_suite(suite)
+    return suite
+
+
+def suite_invalidate(suite: SuiteAnalysis,
+                     traces: Trace | Sequence[Trace]) -> SuiteAnalysis:
+    """Drop scenarios from a live suite (stale/rebuilt trace objects) and
+    re-key it in the process cache — the invalidate half of the API. Cached
+    planes are gathered down to the surviving columns; nothing is
+    rescanned. Returns ``suite`` (shrunk in place)."""
+    n = suite.n_traces
+    suite.invalidate(traces)
+    if suite.n_traces != n:
+        _rekey_suite(suite)
     return suite
 
 
@@ -943,17 +1129,42 @@ class CostGrid:
         return self.max_batch / (self.step_time_s[-1, 0] * output_tokens)
 
 
-@lru_cache(maxsize=None)
+@lru_cache(maxsize=4096)
 def _kv_sweep_trace(kv_bytes: int) -> Trace:
     """One decode iteration's KV sweep as a trace: the whole resident cache
     is read once per step. Priced cyclically, the cache model keeps the
     LLC-resident fraction on package and streams only the remainder from
     DRAM — the closed form this replaced charged the whole sweep to a
-    single level and over-priced partially-resident caches."""
+    single level and over-priced partially-resident caches. Bounded: a
+    long repricing session sweeps an open-ended set of byte counts."""
     tr = Trace(name=f"serve.kvsweep.{int(kv_bytes)}", kind="inference")
     tr.emit("kv.sweep", 0.0, reads=[("kvcache", int(kv_bytes))],
             precision="bf16")
     return tr
+
+
+# KV-sweep pricing session: ONE growing SuiteAnalysis serves every
+# kv_sweep_times call in the process. A new byte count (grid repriced with a
+# different compression tax, page size, or bytes/token) APPENDS a row in
+# O(new trace) and inherits the session's whole capacity union, instead of
+# keying a fresh suite per size set and rescanning the overlap.
+_KV_SESSION_MAX = 1024
+_KV_SESSION: dict[int, int] = {}   # kv byte count -> session row index
+_KV_SUITE: SuiteAnalysis | None = None
+
+
+def _kv_session_suite(sizes: Sequence[int]) -> SuiteAnalysis:
+    global _KV_SUITE
+    new = [s for s in sizes if s not in _KV_SESSION]
+    if _KV_SUITE is None or len(_KV_SESSION) + len(new) > _KV_SESSION_MAX:
+        _KV_SESSION.clear()
+        _KV_SESSION.update({s: i for i, s in enumerate(sizes)})
+        _KV_SUITE = suite_analysis_for([_kv_sweep_trace(s) for s in sizes])
+    elif new:
+        suite_append(_KV_SUITE, [_kv_sweep_trace(s) for s in new])
+        for s in new:
+            _KV_SESSION[s] = len(_KV_SESSION)
+    return _KV_SUITE
 
 
 def kv_sweep_times(specs: Sequence[GpuSpec],
@@ -961,14 +1172,16 @@ def kv_sweep_times(specs: Sequence[GpuSpec],
     """Per-step KV read times of shape ``(len(kv_bytes_seq), len(specs))``,
     priced through the cache model (steady-state cyclic residency; ideal
     occupancy and no launch overhead — the sweep rides along the decode
-    math it accompanies). All sizes share one suite-level ``time_batch``."""
+    math it accompanies). All sizes share one suite-level ``time_batch``
+    over the process-wide KV session suite, so repricing with new sizes
+    pays only for the new rows."""
     sizes = [float(b) for b in kv_bytes_seq]
     finite = sorted({int(s) for s in sizes if s > 0 and np.isfinite(s)})
     out = np.zeros((len(sizes), len(specs)))
     if finite:
-        suite = suite_analysis_for([_kv_sweep_trace(s) for s in finite])
+        suite = _kv_session_suite(finite)
         times = suite.time_batch(list(specs), ideal_occupancy=True)
-        lookup = {s: times[:, i] for i, s in enumerate(finite)}
+        lookup = {s: times[:, _KV_SESSION[s]] for s in finite}
     for r, s in enumerate(sizes):
         if s > 0:
             out[r] = lookup[int(s)] if np.isfinite(s) else np.inf

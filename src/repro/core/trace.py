@@ -17,7 +17,41 @@ import math
 from dataclasses import dataclass, field
 from typing import Iterable, Sequence
 
+import numpy as np
+
 BYTES = {"fp32": 4, "tf32": 4, "fp16": 2, "bf16": 2, "int8": 1, "fp8": 1}
+
+
+@dataclass(frozen=True)
+class TouchTable:
+    """:meth:`Trace.touch_table`: the trace's touches as flat arrays.
+
+    One slim Python pass builds the raw columns; every per-tensor statistic
+    the cache model needs (first/last touch, max size, first-is-write) is
+    derived vectorized. ``name_id`` interns tensor names in first-appearance
+    order — the dense-id convention the flatten/recycling passes in
+    ``repro.core.cachesim`` build on.
+    """
+
+    op_idx: np.ndarray        # (n,) int32 op index per touch
+    name_id: np.ndarray       # (n,) int64 first-appearance interned name id
+    sizes: np.ndarray         # (n,) float64 touch bytes
+    is_write: np.ndarray      # (n,) bool
+    names: list[str]          # id -> tensor name (first-appearance order)
+    stream_flag: np.ndarray   # (K,) bool: name starts with "in."
+    first: np.ndarray         # (K,) int64 first touch position
+    last: np.ndarray          # (K,) int64 last touch position
+    max_size: np.ndarray      # (K,) float64 max touch bytes of the tensor
+    first_is_write: np.ndarray  # (K,) bool
+    has_buf_names: bool       # any real tensor named like a recycled buffer
+
+    @property
+    def n_touches(self) -> int:
+        return len(self.op_idx)
+
+    @property
+    def n_names(self) -> int:
+        return len(self.names)
 
 
 @dataclass(frozen=True)
@@ -148,6 +182,62 @@ class Trace:
                 yield i, t, b, False
             for t, b in op.writes:
                 yield i, t, b, True
+
+    def touch_table(self) -> TouchTable:
+        """Flat touch arrays + per-tensor stats, cached on the trace.
+
+        Same touch order as :meth:`touches` (reads before writes per op).
+        Keyed by op count like the analysis caches: a trace that grows via
+        :meth:`emit` gets a fresh table; in-place edits of existing ops are
+        on the caller.
+        """
+        cached = self.__dict__.get("_touch_table")
+        if cached is not None and cached[0] == len(self.ops):
+            return cached[1]
+        rw = [op.reads + op.writes for op in self.ops]
+        counts = np.fromiter((len(x) for x in rw), dtype=np.int64,
+                             count=len(rw))
+        n = int(counts.sum())
+        intern: dict[str, int] = {}
+        name_id = np.fromiter(
+            (intern.setdefault(t, len(intern)) for x in rw for t, _ in x),
+            dtype=np.int64, count=n)
+        sizes = np.fromiter((b for x in rw for _, b in x),
+                            dtype=np.float64, count=n)
+        op_idx = np.repeat(np.arange(len(rw), dtype=np.int32), counts)
+        n_reads = np.fromiter((len(op.reads) for op in self.ops),
+                              dtype=np.int64, count=len(rw))
+        op_start = np.cumsum(counts) - counts
+        pos = np.arange(n, dtype=np.int64)
+        is_write = pos - np.repeat(op_start, counts) >= np.repeat(n_reads,
+                                                                  counts)
+        K = len(intern)
+        if n:
+            # name_id is first-appearance interned, so np.unique's sorted
+            # uniques are exactly 0..K-1 and return_index gives first touches.
+            first = np.unique(name_id, return_index=True)[1]
+            last = (n - 1) - np.unique(name_id[::-1], return_index=True)[1]
+        else:
+            first = np.zeros(0, dtype=np.int64)
+            last = np.zeros(0, dtype=np.int64)
+        max_size = np.zeros(K)
+        np.maximum.at(max_size, name_id, sizes)
+        table = TouchTable(
+            op_idx=op_idx,
+            name_id=name_id,
+            sizes=sizes,
+            is_write=is_write,
+            names=list(intern),
+            stream_flag=np.fromiter((t.startswith("in.") for t in intern),
+                                    dtype=bool, count=K),
+            first=first,
+            last=last,
+            max_size=max_size,
+            first_is_write=is_write[first] if n else np.zeros(0, dtype=bool),
+            has_buf_names=any(t.startswith("__buf") for t in intern),
+        )
+        self.__dict__["_touch_table"] = (len(self.ops), table)
+        return table
 
     def scaled(self, name: str, flop_scale: float, byte_scale: float) -> "Trace":
         """Uniformly scaled copy (used for projection sensitivity tests)."""

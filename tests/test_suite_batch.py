@@ -253,7 +253,8 @@ def test_suite_prefetch_batches_despite_warm_members(mixed_traces):
     pre = warm._levels[float(cap)]
     calls = []
     orig = suite.batch.traffic_matrices
-    suite.batch.traffic_matrices = lambda caps: calls.append(list(caps)) or orig(caps)
+    suite.batch.traffic_matrices = \
+        lambda caps, **kw: calls.append(list(caps)) or orig(caps, **kw)
     suite.prefetch([cap])
     assert calls == [[cap]]  # exactly one batched scan, not N-1 per-trace
     assert warm._levels[float(cap)] is pre  # warm member untouched

@@ -1,0 +1,304 @@
+"""Incremental suite builds: append/invalidate parity and the fast flatten.
+
+The PR-10 contract, asserted field for field:
+
+* appending scenarios one at a time — in any order — produces a
+  `SuiteAnalysis` bit-identical to the cold full build over the same list
+  (static vectors, every cached traffic plane, l2 touch, totals, the full
+  time model, component matrices, attribution grids);
+* `invalidate` gathers cached planes down to the survivors, equal to a
+  cold build of the survivors;
+* the array-based `_flatten_trace` (closed-form dense ids + birth-only
+  recycler) equals the dict-based `_reference_flatten` oracle exactly;
+* the bounded stream LRU exposes accurate hit/miss/eviction counters.
+
+A hypothesis program over random append/evict sequences rides along,
+importorskip-guarded like the other property suites.
+"""
+import numpy as np
+import pytest
+
+from repro.core import copa
+from repro.core import sweep as sweep_mod
+from repro.core.cachesim import (
+    _flatten_trace,
+    _reference_flatten,
+    build_streams,
+    set_stream_cache_limit,
+    stream_cache_clear,
+    stream_cache_stats,
+)
+from repro.core.hw import MB
+from repro.core.sweep import (
+    SuiteAnalysis,
+    _as_spec,
+    kv_sweep_times,
+    suite_analysis_for,
+    suite_append,
+    suite_invalidate,
+)
+from repro.workloads import registry
+from test_suite_batch import _random_suite
+
+CAPS = [float(c) * MB for c in (7, 60, 960)] + [float(1 << 50)]
+SPECS = [_as_spec(c) for c in copa.TABLE_V[:3]]
+
+
+def _snapshot(suite):
+    """Every externally observable plane of a SuiteAnalysis, materialized.
+    The model evaluations run FIRST so `_levels_cat` holds every capacity
+    they materialize before the planes are copied."""
+    suite.prefetch(CAPS)
+    time = suite.time_batch(SPECS)
+    components = suite.component_batch(SPECS)
+    attribution = suite.attribution_grid(SPECS)
+    return {
+        "flops": suite.flops.copy(),
+        "parallelism": suite.parallelism.copy(),
+        "is_tc": suite.is_tc.copy(),
+        "l2_touch": suite.l2_touch.copy(),
+        "levels": {c: (f.copy(), w.copy())
+                   for c, (f, w) in suite._levels_cat.items()},
+        "totals": {c: suite.totals_below(c).copy() for c in CAPS},
+        "time": time,
+        "components": components,
+        "attribution": attribution,
+        "op_slices": [suite.op_slice(i) for i in range(suite.n_traces)],
+    }
+
+
+def _assert_identical(a, b):
+    assert a["op_slices"] == b["op_slices"]
+    for k in ("flops", "parallelism", "is_tc", "l2_touch", "time",
+              "components"):
+        assert a[k].dtype == b[k].dtype, k
+        assert np.array_equal(a[k], b[k]), k
+    assert a["levels"].keys() == b["levels"].keys()
+    for c in a["levels"]:
+        for u, v in zip(a["levels"][c], b["levels"][c]):
+            assert np.array_equal(u, v), ("levels", c)
+    for c in a["totals"]:
+        assert np.array_equal(a["totals"][c], b["totals"][c]), ("totals", c)
+    for ra, rb in zip(a["attribution"], b["attribution"]):
+        assert ra == rb
+
+
+def _fresh_suite(traces, **kw):
+    """A SuiteAnalysis over private TraceAnalysis objects: cleared stream
+    cache so member analyses share nothing with other suites in the test."""
+    stream_cache_clear()
+    return SuiteAnalysis(traces, **kw)
+
+
+@pytest.fixture
+def suite_traces():
+    rng = np.random.default_rng(42)
+    return _random_suite(rng, 8, max_ops=60)
+
+
+# --- flatten parity -----------------------------------------------------------
+
+def test_flatten_matches_reference_oracle():
+    """Array flatten == dict oracle: exact arrays, dtypes, scalar fields."""
+    rng = np.random.default_rng(5)
+    traces = _random_suite(rng, 10, max_ops=70)
+    traces += [registry.scenario(n) for n in registry.scenarios()[:20]]
+    for tr in traces:
+        for cyclic in (True, False):
+            for reuse in (True, False):
+                got = _flatten_trace(tr, cyclic, reuse)
+                want = _reference_flatten(tr, cyclic, reuse)
+                assert got[4] == want[4] and got[5] == want[5], tr.name
+                for g, w in zip(got[:4], want[:4]):
+                    assert g.dtype == w.dtype, tr.name
+                    assert np.array_equal(g, w), tr.name
+
+
+def test_flatten_falls_back_on_buf_named_tensors():
+    """A real tensor named like a recycled buffer would collide with the
+    closed-form id scheme — such traces must take the oracle path."""
+    tr = registry.scenario(registry.scenarios()[0])
+    from repro.core.trace import Trace
+    weird = Trace("weird")
+    weird.emit("k", 1e6, reads=[("__buf0.x", 8 * MB)],
+               writes=[("y", 4 * MB)])
+    assert weird.touch_table().has_buf_names
+    assert not tr.touch_table().has_buf_names
+    got = _flatten_trace(weird, True, True)
+    want = _reference_flatten(weird, True, True)
+    for g, w in zip(got[:4], want[:4]):
+        assert np.array_equal(g, w)
+
+
+# --- append / invalidate parity ----------------------------------------------
+
+def test_append_one_at_a_time_matches_cold_build(suite_traces):
+    cold = _fresh_suite(suite_traces)
+    want = _snapshot(cold)
+    for order in (range(len(suite_traces)),
+                  reversed(range(len(suite_traces))),
+                  (3, 0, 6, 1, 7, 2, 5, 4)):
+        order = list(order)
+        inc = _fresh_suite([suite_traces[order[0]]])
+        # Warm every cache class early so appends must extend them all.
+        inc.prefetch(CAPS)
+        inc.time_batch(SPECS)
+        _ = inc.l2_touch
+        for i in order[1:]:
+            inc.append([suite_traces[i]])
+        got = _snapshot(inc)
+        # Compare trace-by-trace: append order permutes rows/slices.
+        for dst, src in enumerate(order):
+            sl_c, sl_i = want["op_slices"][src], got["op_slices"][dst]
+            for k in ("flops", "parallelism", "is_tc", "l2_touch"):
+                assert np.array_equal(want[k][sl_c], got[k][sl_i]), (k, src)
+            for c in want["levels"]:
+                for u, v in zip(want["levels"][c], got["levels"][c]):
+                    assert np.array_equal(u[sl_c], v[sl_i]), ("lv", c, src)
+            assert np.array_equal(want["time"][:, src], got["time"][:, dst])
+            assert np.array_equal(want["components"][:, :, sl_c],
+                                  got["components"][:, :, sl_i])
+            assert want["attribution"][src] == got["attribution"][dst]
+        for c in want["totals"]:
+            assert np.array_equal(want["totals"][c][order], got["totals"][c])
+
+    # In-order incremental build is bit-identical INCLUDING layout.
+    inc = _fresh_suite(suite_traces[:1])
+    inc.prefetch(CAPS)
+    inc.time_batch(SPECS)
+    for t in suite_traces[1:]:
+        inc.append([t])
+    _assert_identical(want, _snapshot(inc))
+
+
+def test_invalidate_matches_cold_build_of_survivors(suite_traces):
+    inc = _fresh_suite(suite_traces)
+    _snapshot(inc)  # warm every plane first
+    drop = [suite_traces[1], suite_traces[4], suite_traces[6]]
+    inc.invalidate(drop)
+    survivors = [t for t in suite_traces if t not in drop]
+    assert [id(t) for t in inc.traces] == [id(t) for t in survivors]
+    cold = _fresh_suite(survivors)
+    _assert_identical(_snapshot(cold), _snapshot(inc))
+    # Unknown traces are a no-op.
+    inc.invalidate(drop)
+    assert inc.n_traces == len(survivors)
+
+
+def test_interleaved_append_invalidate(suite_traces):
+    inc = _fresh_suite(suite_traces[:4])
+    _snapshot(inc)
+    inc.invalidate([suite_traces[0], suite_traces[2]])
+    inc.append(suite_traces[4:7])
+    inc.invalidate(suite_traces[5])
+    inc.append([suite_traces[0]])
+    final = [suite_traces[1], suite_traces[3], suite_traces[4],
+             suite_traces[6], suite_traces[0]]
+    assert [id(t) for t in inc.traces] == [id(t) for t in final]
+    cold = _fresh_suite(final)
+    _assert_identical(_snapshot(cold), _snapshot(inc))
+
+
+def test_appended_rows_inherit_capacity_union(suite_traces):
+    """The session planner: capacities computed before an append must be
+    present for the appended rows without any further prefetch call."""
+    inc = _fresh_suite(suite_traces[:3])
+    inc.prefetch(CAPS)
+    inc.append(suite_traces[3:5])
+    for c in CAPS:
+        assert c in inc._levels_cat
+        assert len(inc._levels_cat[c][0]) == inc.batch.n_ops_total
+        for ta in inc.analyses[3:]:
+            assert c in ta._levels  # installed into the member cache too
+
+
+def test_suite_append_rekeys_memo_layer(suite_traces):
+    sweep_mod._SUITES.clear()
+    base = suite_analysis_for(suite_traces[:5])
+    grown = suite_append(base, suite_traces[5:])
+    assert grown is base and base.n_traces == len(suite_traces)
+    # The grown membership now HITS; the old membership misses (rebuild).
+    assert suite_analysis_for(suite_traces) is base
+    assert suite_analysis_for(suite_traces[:5]) is not base
+    # Appending traces already in the suite is a no-op.
+    assert suite_append(base, suite_traces[:2]).n_traces == len(suite_traces)
+    shrunk = suite_invalidate(base, suite_traces[0])
+    assert shrunk is base
+    assert suite_analysis_for(suite_traces[1:]) is base
+
+
+# --- stream cache bounds ------------------------------------------------------
+
+def test_stream_cache_counters_and_bounds(suite_traces):
+    stream_cache_clear()
+    try:
+        build_streams(suite_traces)
+        s = stream_cache_stats()
+        assert s["misses"] == len(suite_traces) and s["hits"] == 0
+        assert s["entries"] == len(suite_traces) and s["bytes"] > 0
+        build_streams(suite_traces)
+        s = stream_cache_stats()
+        assert s["hits"] == len(suite_traces)
+        assert s["misses"] == len(suite_traces)  # unchanged
+        set_stream_cache_limit(max_entries=3)
+        s = stream_cache_stats()
+        assert s["entries"] == 3
+        assert s["evictions"] == len(suite_traces) - 3
+        # Byte budget: one entry's worth keeps only the newest streams.
+        set_stream_cache_limit(max_bytes=0)
+        assert stream_cache_stats()["entries"] == 0
+    finally:
+        set_stream_cache_limit(max_entries=512, max_bytes=256 * 1024 * 1024)
+        stream_cache_clear()
+
+
+# --- kv session ---------------------------------------------------------------
+
+def test_kv_session_grows_not_rebuilds():
+    sweep_mod._KV_SESSION.clear()
+    sweep_mod._KV_SUITE = None
+    sizes = [64 * MB, 256 * MB]
+    first = kv_sweep_times(SPECS, sizes)
+    suite = sweep_mod._KV_SUITE
+    assert suite is not None and suite.n_traces == 2
+    again = kv_sweep_times(SPECS, sizes + [512 * MB])
+    assert sweep_mod._KV_SUITE is suite and suite.n_traces == 3
+    # Old sizes reprice bit-identically from the grown session.
+    assert np.array_equal(again[:2], first)
+    # Parity with a standalone one-trace suite for the new size.
+    solo = SuiteAnalysis([sweep_mod._kv_sweep_trace(int(512 * MB))])
+    want = solo.time_batch(SPECS, ideal_occupancy=True)[:, 0]
+    assert np.array_equal(again[2], want)
+
+
+# --- hypothesis program -------------------------------------------------------
+
+def test_random_append_evict_program():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=2**31 - 1),
+           data=st.data())
+    def run(seed, data):
+        rng = np.random.default_rng(seed)
+        pool = _random_suite(rng, 6, max_ops=40)
+        live = list(pool[:2])
+        suite = _fresh_suite(live)
+        suite.prefetch(CAPS[:2])
+        n_steps = data.draw(st.integers(min_value=1, max_value=6))
+        for _ in range(n_steps):
+            absent = [t for t in pool if t not in live]
+            if absent and (not live or data.draw(st.booleans())):
+                t = absent[data.draw(
+                    st.integers(min_value=0, max_value=len(absent) - 1))]
+                suite.append([t])
+                live.append(t)
+            elif live:
+                t = live.pop(data.draw(
+                    st.integers(min_value=0, max_value=len(live) - 1)))
+                suite.invalidate(t)
+        cold = _fresh_suite(live)
+        _assert_identical(_snapshot(cold), _snapshot(suite))
+
+    run()
